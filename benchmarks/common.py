@@ -1,0 +1,84 @@
+"""Shared helpers for the benchmark harness: artifact IO + ASCII plots."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Sequence
+
+ART = Path("artifacts/bench")
+
+
+def save_json(name: str, payload: Any) -> Path:
+    ART.mkdir(parents=True, exist_ok=True)
+    p = ART / f"{name}.json"
+
+    def default(o):
+        if dataclasses.is_dataclass(o):
+            return dataclasses.asdict(o)
+        if hasattr(o, "item"):
+            return o.item()
+        if hasattr(o, "tolist"):
+            return o.tolist()
+        return str(o)
+
+    p.write_text(json.dumps(payload, indent=1, default=default))
+    return p
+
+
+def save_csv(name: str, rows: List[Dict[str, Any]]) -> Path:
+    ART.mkdir(parents=True, exist_ok=True)
+    p = ART / f"{name}.csv"
+    if not rows:
+        p.write_text("")
+        return p
+    cols = list(rows[0].keys())
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(str(r.get(c, "")) for c in cols))
+    p.write_text("\n".join(lines) + "\n")
+    return p
+
+
+def ascii_curves(title: str, xs: Sequence[float],
+                 series: Dict[str, Sequence[float]], width: int = 64,
+                 height: int = 14, logy: bool = False) -> str:
+    """Minimal multi-series ASCII line chart (artifact-friendly plots)."""
+    import math
+    vals = [v for ys in series.values() for v in ys if v is not None]
+    if not vals:
+        return f"{title}: (no data)"
+    f = (lambda v: math.log10(max(v, 1e-12))) if logy else (lambda v: v)
+    lo = min(f(v) for v in vals)
+    hi = max(f(v) for v in vals)
+    span = (hi - lo) or 1.0
+    grid = [[" "] * width for _ in range(height)]
+    marks = "ox+*#@%&"
+    for si, (name, ys) in enumerate(series.items()):
+        m = marks[si % len(marks)]
+        for xi, y in enumerate(ys):
+            if y is None:
+                continue
+            cx = int(xi / max(len(ys) - 1, 1) * (width - 1))
+            cy = int((f(y) - lo) / span * (height - 1))
+            grid[height - 1 - cy][cx] = m
+    out = [title]
+    ylab = f"{'log10 ' if logy else ''}[{lo:.3g}, {hi:.3g}]"
+    out.append(f"  y: {ylab}   x: [{xs[0]:.3g}, {xs[-1]:.3g}]")
+    out += ["  |" + "".join(row) for row in grid]
+    out.append("  +" + "-" * width)
+    legend = "   ".join(f"{marks[i % len(marks)]}={n}"
+                        for i, n in enumerate(series))
+    out.append("   " + legend)
+    return "\n".join(out)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

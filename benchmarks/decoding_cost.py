@@ -1,0 +1,77 @@
+"""Decoder cost vs k (paper Sec. 2: one-step is O(nnz) and streaming;
+optimal is a least-squares solve — poly and memory-hungry).
+
+Measures wall-time per decode for numpy (master-side) and the Pallas
+kernels (interpret mode timing is NOT meaningful on CPU — we report it
+for completeness but the scaling claims use the numpy path)."""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import codes, decoding
+from .common import save_csv, save_json
+
+
+def _time(fn, reps: int = 5) -> float:
+    fn()  # warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(ks=(64, 128, 256, 512, 1024, 2048), delta: float = 0.3,
+        seed: int = 0, iters: int = 4):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for k in ks:
+        s = max(2, int(np.ceil(2 * np.log(k))))
+        code = codes.bgc(k=k, n=k, s=s, rng=rng)
+        mask = np.ones(k, bool)
+        mask[rng.choice(k, int(delta * k), replace=False)] = False
+        r = int(mask.sum())
+        rho = decoding.default_rho(k, r, s)
+        t_one = _time(lambda: decoding.onestep_weights(code.G, mask, rho))
+        t_opt = _time(lambda: decoding.optimal_weights(code.G, mask))
+        t_alg = _time(lambda: decoding.algorithmic_weights(code.G, mask,
+                                                           iters=iters))
+        rows.append({"k": k, "s": s, "r": r,
+                     "onestep_us": t_one, "optimal_us": t_opt,
+                     f"algorithmic{iters}_us": t_alg,
+                     "opt_over_onestep": t_opt / max(t_one, 1e-9)})
+    save_csv("decoding_cost", rows)
+    save_json("decoding_cost", rows)
+
+    # scaling claims: one-step stays micro-scale; optimal grows superlinearly
+    t1 = [r["onestep_us"] for r in rows]
+    to = [r["optimal_us"] for r in rows]
+    checks = {
+        "onestep_linear_ish": bool(
+            t1[-1] / t1[0] < 8 * (ks[-1] / ks[0])),
+        "optimal_superlinear": bool(
+            to[-1] / max(to[0], 1e-9) > (ks[-1] / ks[0])),
+        "onestep_much_cheaper_at_scale": bool(to[-1] / t1[-1] > 10),
+    }
+    return {"rows": rows, "checks": checks}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=4)
+    args = ap.parse_args(argv)
+    rep = run(iters=args.iters)
+    for r in rep["rows"]:
+        print({k: (round(v, 1) if isinstance(v, float) else v)
+               for k, v in r.items()})
+    ok = all(rep["checks"].values())
+    print("decoding cost checks:", rep["checks"])
+    print("PASS" if ok else "MISMATCH")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,193 @@
+"""Assemble the roofline table (EXPERIMENTS.md §Roofline) from dry-run
+artifacts.
+
+Per (arch x shape), single-pod mesh (per the brief):
+
+  compute_s    = HLO_FLOPs_per_device / 197e12      (bf16 peak, v5e)
+  memory_s     = HLO_bytes_per_device / 819e9
+  collective_s = collective_bytes_per_device / 50e9
+
+HLO terms come from the two reduced-depth UNROLLED variants (1 and 2
+pattern groups) extrapolated linearly to full depth — XLA counts a scan
+(`while`) body once, so the full-model cost_analysis undercounts by
+~n_layers (DESIGN.md Sec. 6).  Chunked-attention inner loops are likewise
+counted once even in the unrolled variants; an ANALYTIC attention
+correction (flops + flash-style bytes) is added per attention layer and
+reported in its own columns for transparency.
+
+Also reports MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (prefill)
+/ 2*N_active*B (decode) and the usefulness ratio MODEL_FLOPS/HLO_FLOPs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.launch import roofline as RL
+from repro.models import SHAPES, build_model
+
+DRYRUN = Path("artifacts/dryrun")
+CHIPS = 256  # single-pod mesh (16 x 16)
+
+
+def _attn_layers(cfg) -> int:
+    return cfg._block_counts().get("attn", 0) + cfg.encoder_layers \
+        + (cfg.n_layers if cfg.encoder_layers else 0)  # cross-attn blocks
+
+
+def attention_correction(cfg, cell) -> tuple[float, float]:
+    """(flops, bytes) per device hidden inside chunked-attention loops.
+
+    Only train/prefill full-sequence attention runs the chunked (looped)
+    path; decode uses the unlooped naive path and needs no correction.
+    Causal halves the score pairs; sliding windows clip them.
+    """
+    if cell.kind == "decode":
+        return 0.0, 0.0
+    n_attn = _attn_layers(cfg)
+    if n_attn == 0:
+        return 0.0, 0.0
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.family == "encdec":
+        S_dec = max(S // 8, 16)
+    H, Kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    pairs = S * (S + 1) / 2 if not cfg.local_window else \
+        min(S * cfg.local_window, S * (S + 1) / 2)
+    # QK^T and PV: 2 matmuls x 2 FLOP/MAC; x3 for train (bwd ~ 2x fwd)
+    mult = 3.0 if cell.kind == "train" else 1.0
+    flops = mult * 4.0 * B * H * dh * pairs
+    # flash-style HBM bytes: Q,K,V read + O write + K/V re-read per q-block
+    q_block = 512
+    nq = max(S // q_block, 1)
+    elt = 2  # bf16
+    bytes_ = B * S * dh * elt * (2 * H + 2 * Kv + 2 * Kv * nq) * mult
+    return flops / CHIPS, bytes_ / CHIPS
+
+
+def cell_roofline(arch: str, shape: str, opt: bool = False) -> dict | None:
+    suffix = "__opt" if opt else ""
+    f = DRYRUN / f"{arch}__{shape}__data16_model16{suffix}.json"
+    if not f.exists():
+        return None
+    rec = json.loads(f.read_text())
+    if rec.get("status") == "skipped":
+        return {"arch": arch, "shape": shape, "status": "skipped",
+                "variant": "opt" if opt else "baseline",
+                "reason": rec.get("reason", "")}
+    if rec.get("status") != "ok" or not rec.get("variants"):
+        return {"arch": arch, "shape": shape, "status": "missing",
+                "variant": "opt" if opt else "baseline"}
+
+    cfg = get_config(arch)
+    if opt:
+        from repro.launch import perf as PERF
+        cfg = PERF.optimize(cfg)
+    model = build_model(cfg)
+    cell = SHAPES[shape]
+    v1, v2 = rec["variants"][0], rec["variants"][1]
+    L1, L2, Lf = v1["n_layers"], v2["n_layers"], cfg.n_layers
+
+    def extrap(key):
+        a = v1["cost_analysis"].get(key, 0.0)
+        b = v2["cost_analysis"].get(key, 0.0)
+        return max(RL.linear_extrapolate(a, b, L1, L2, Lf), 0.0)
+
+    flops = extrap("flops")
+    bytes_ = extrap("bytes accessed")
+    coll = max(RL.linear_extrapolate(
+        v1["collective_bytes"], v2["collective_bytes"], L1, L2, Lf), 0.0)
+    aflops, abytes = attention_correction(cfg, cell)
+
+    terms = RL.roofline_terms(flops + aflops, bytes_ + abytes, coll)
+    mf = RL.analytic_model_flops(cfg, cell, rec["active_params"]) / CHIPS
+    out = {
+        "arch": arch, "shape": shape, "status": "ok", "kind": cell.kind,
+        "variant": "opt" if opt else "baseline",
+        "params": rec["params"], "active_params": rec["active_params"],
+        "hlo_flops": flops, "attn_corr_flops": aflops,
+        "hlo_bytes": bytes_, "attn_corr_bytes": abytes,
+        "collective_bytes": coll,
+        "collectives_by_kind": rec["collectives"]["bytes_by_kind"],
+        "model_flops": mf,
+        "useful_ratio": mf / max(flops + aflops, 1.0),
+        "temp_bytes_per_dev": rec["memory_analysis"].get(
+            "temp_size_in_bytes"),
+        "arg_bytes_per_dev": rec["memory_analysis"].get(
+            "argument_size_in_bytes"),
+        "compile_s": rec.get("compile_s"),
+        **terms,
+    }
+    out["advice"] = _advice(out)
+    return out
+
+
+def _advice(row: dict) -> str:
+    d = row["dominant"]
+    if d == "memory":
+        return ("memory-bound: cut HBM traffic — microbatch the step, "
+                "bf16 weight streaming (FSDP-style gather), fuse the "
+                "fp32 logit/CE chain")
+    if d == "collective":
+        return ("collective-bound: reduce-scatter gradients instead of "
+                "all-reduce, overlap layer all-gathers with compute, "
+                "shrink TP degree for this shape")
+    return ("compute-bound: near roofline — raise MXU utilization "
+            "(tile alignment) and trim non-matmul flops (remat policy)")
+
+
+def build_table() -> list:
+    rows = []
+    archs = sorted({p.name.split("__")[0] for p in DRYRUN.glob("*.json")})
+    for arch in archs:
+        for shape in SHAPES:
+            r = cell_roofline(arch, shape)
+            if r is not None:
+                rows.append(r)
+            ro = cell_roofline(arch, shape, opt=True)
+            if ro is not None:
+                rows.append(ro)
+    return rows
+
+
+def markdown_table(rows: list) -> str:
+    hdr = ("| arch | shape | variant | compute_s | memory_s | collective_s "
+           "| bound | roofline_frac | useful_ratio |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        var = r.get("variant", "baseline")
+        if r["status"] != "ok":
+            if var == "opt":
+                continue  # no opt artifact for this cell
+            lines.append(f"| {r['arch']} | {r['shape']} | {var} | — | — | — "
+                         f"| {r['status']} | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {var} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+            f"{r['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/roofline.json")
+    args = ap.parse_args(argv)
+    rows = build_table()
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(json.dumps(rows, indent=1))
+    md = markdown_table(rows)
+    Path("artifacts/roofline.md").write_text(md + "\n")
+    print(md)
+    ok_rows = [r for r in rows if r["status"] == "ok"]
+    print(f"\n{len(ok_rows)} ok cells, "
+          f"{sum(1 for r in rows if r['status'] == 'skipped')} skipped")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,122 @@
+"""Closed-form theory vs Monte Carlo (Theorems 5, 6, 7/8, 21 + exact BGC).
+
+The paper's Thm 5/6 algebra contains two finite-k slips (documented in
+EXPERIMENTS.md errata); we check BOTH the printed forms (loose at small k)
+and the corrected exact forms (tight at all k)."""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import codes, decoding, simulate, theory
+from .common import save_csv, save_json
+
+
+def run(trials: int = 2000, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    checks = {}
+
+    # ---- Thm 5 (FRC one-step) ----
+    for (k, s, delta) in [(100, 5, 0.2), (100, 10, 0.4), (60, 6, 0.5)]:
+        r = int(round((1 - delta) * k))
+        mc = simulate.monte_carlo_error("frc", k=k, n=k, s=s, delta=delta,
+                                        trials=trials, decoder="onestep",
+                                        seed=seed).mean * k
+        exact = theory.thm5_expected_err1_frc_exact(k, s, r)
+        printed = theory.thm5_expected_err1_frc(k, s, delta)
+        rows.append({"thm": "5", "k": k, "s": s, "delta": delta, "mc": mc,
+                     "exact": exact, "printed": printed})
+        checks[f"thm5_k{k}s{s}d{delta}"] = bool(
+            abs(mc - exact) / max(exact, 1e-9) < 0.15)
+
+    # ---- Thm 6 (FRC optimal) ----
+    for (k, s, delta) in [(100, 5, 0.3), (100, 10, 0.5), (60, 6, 0.4)]:
+        r = int(round((1 - delta) * k))
+        mc = simulate.monte_carlo_error("frc", k=k, n=k, s=s, delta=delta,
+                                        trials=trials, decoder="optimal",
+                                        seed=seed).mean * k
+        exact = theory.thm6_expected_err_frc(k, s, r)
+        printed = theory.thm6_expected_err_frc_as_printed(k, s, r)
+        rows.append({"thm": "6", "k": k, "s": s, "delta": delta, "mc": mc,
+                     "exact": exact, "printed": printed})
+        checks[f"thm6_k{k}s{s}d{delta}"] = bool(
+            abs(mc - exact) <= max(0.2 * exact, 0.35))
+
+    # ---- Thm 7/8 tails + Cor 9 zero-error threshold ----
+    k, delta = 100, 0.3
+    r = int(round((1 - delta) * k))
+    s_min = int(np.ceil(theory.cor9_s_zero_error(k, delta)))
+    s0 = next(s for s in range(s_min, k + 1) if k % s == 0)  # FRC needs s | k
+    nz = 0
+    for t in range(trials):
+        code = codes.frc(k=k, n=k, s=s0)
+        mask = simulate.sample_straggler_mask(
+            k, k - r, np.random.default_rng(seed + t))
+        if decoding.err(code.G[:, mask]) > 1e-9:
+            nz += 1
+    p_nz = nz / trials
+    rows.append({"thm": "cor9", "k": k, "s": s0, "delta": delta,
+                 "mc": p_nz, "exact": 1.0 / k, "printed": 1.0 / k})
+    checks["cor9_zero_error_whp"] = bool(p_nz <= 1.0 / k + 3 *
+                                         np.sqrt(1.0 / k / trials) + 5e-3)
+
+    # Thm 7: tail bound holds at every alpha
+    s = 10
+    tail_ok = True
+    errs = []
+    for t in range(trials):
+        code = codes.frc(k=k, n=k, s=s)
+        mask = simulate.sample_straggler_mask(
+            k, k - r, np.random.default_rng(seed + 10_000 + t))
+        errs.append(decoding.err(code.G[:, mask]))
+    errs = np.asarray(errs)
+    for alpha in range(0, 5):
+        emp = float((errs > alpha * s + 1e-9).mean())
+        bound = theory.thm7_tail_frc(k, s, r, alpha)
+        rows.append({"thm": "7", "k": k, "s": s, "delta": delta,
+                     "mc": emp, "exact": bound, "printed": bound,
+                     "alpha": alpha})
+        tail_ok &= emp <= bound + 3 * np.sqrt(bound / trials) + 5e-3
+    checks["thm7_tail_bound_holds"] = bool(tail_ok)
+
+    # ---- BGC exact mean (one-step) + Thm 21 shape calibration ----
+    cs = []
+    for (k, s, delta) in [(100, 8, 0.2), (100, 12, 0.4), (200, 10, 0.3)]:
+        r = int(round((1 - delta) * k))
+        mc = simulate.monte_carlo_error("bgc", k=k, n=k, s=s, delta=delta,
+                                        trials=trials, decoder="onestep",
+                                        seed=seed).mean * k
+        exact = theory.expected_err1_bgc_exact(k, s, r)
+        rows.append({"thm": "bgc_exact", "k": k, "s": s, "delta": delta,
+                     "mc": mc, "exact": exact, "printed": exact})
+        checks[f"bgc_exact_k{k}s{s}"] = bool(
+            abs(mc - exact) / max(exact, 1e-9) < 0.15)
+        # calibrate Thm 21's constant: err1 <= C^2 k/((1-delta)s)
+        cs.append(np.sqrt(mc * (1 - delta) * s / k))
+    checks["thm21_constant_O1"] = bool(max(cs) < 3.0)  # C is a small O(1)
+    rows.append({"thm": "21C", "k": 0, "s": 0, "delta": 0,
+                 "mc": float(max(cs)), "exact": 3.0, "printed": 3.0})
+
+    save_csv("theory_check", rows)
+    save_json("theory_check", {"rows": rows, "checks": checks})
+    return {"rows": rows, "checks": checks}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=2000)
+    args = ap.parse_args(argv)
+    rep = run(trials=args.trials)
+    for r in rep["rows"]:
+        print(r)
+    ok = all(rep["checks"].values())
+    print("theory checks:", rep["checks"])
+    print("PASS" if ok else "MISMATCH")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,89 @@
+"""Straggler-robustness study: decode error + modelled wall-clock across
+straggler regimes and codes — the paper's runtime/robustness trade-off as
+a runnable scenario.
+
+    PYTHONPATH=src python examples/straggler_robustness.py [--trials 200]
+
+Sweeps straggler models (iid / fixed-fraction / Pareto-deadline /
+correlated pod-level / adversarial) x codes (FRC / BGC / rBGC) and prints
+the mean decode error each combination absorbs, plus the modelled step
+time of deadline-vs-sync aggregation.  The adversarial row shows FRC's
+Thm-10 collapse while the random codes hold (Sec. 4).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import codes, decoding
+from repro.runtime import make_straggler_model
+from repro.runtime.latency import simulate_wallclock
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--s", type=int, default=8)
+    ap.add_argument("--delta", type=float, default=0.25)
+    ap.add_argument("--trials", type=int, default=200)
+    args = ap.parse_args(argv)
+    n, s, delta = args.n, args.s, args.delta
+    rng = np.random.default_rng(0)
+
+    scenarios = {
+        "iid": dict(name="iid", delta=delta, seed=0),
+        "fixed": dict(name="fixed", delta=delta, seed=0),
+        "deadline(pareto)": dict(name="deadline", deadline=1.5,
+                                 tail_scale=0.4, seed=0),
+        "correlated(pod=8)": dict(name="correlated", pod_size=8,
+                                  p_pod=0.1, p_node=0.05, seed=0),
+        "adversarial": None,  # built per-code below (needs G)
+    }
+
+    print(f"n={n} workers, s={s} tasks/worker, delta~{delta:.0%}; "
+          f"{args.trials} steps per cell.  Entries: mean decode err/k "
+          f"(one-step | optimal)\n")
+    hdr = f"{'straggler model':>18} | " + " | ".join(
+        f"{c:^17}" for c in ("frc", "bgc", "rbgc"))
+    print(hdr)
+    print("-" * len(hdr))
+
+    for sc_name, sc_kw in scenarios.items():
+        cells = []
+        for scheme in ("frc", "bgc", "rbgc"):
+            code = codes.make_code(scheme, k=n, n=n, s=s,
+                                   rng=np.random.default_rng(1))
+            if sc_name == "adversarial":
+                model = make_straggler_model("adversarial", G=code.G,
+                                             delta=delta)
+            else:
+                model = make_straggler_model(**sc_kw)
+            e1s, eos = [], []
+            for t in range(args.trials):
+                mask = model.sample(t, n)
+                A = code.G[:, mask]
+                r = int(mask.sum())
+                e1s.append(decoding.err1(A, decoding.default_rho(n, r, s)) / n)
+                eos.append(decoding.err(A) / n)
+            cells.append(f"{np.mean(e1s):>7.4f} | {np.mean(eos):>7.4f}")
+        print(f"{sc_name:>18} | " + " | ".join(cells))
+
+    # ---- modelled wall clock: the trade the paper is buying ----
+    lat = make_straggler_model("deadline", deadline=1.5, tail_scale=0.4,
+                               seed=0)
+    sync = simulate_wallclock(lat, n, args.trials, policy="sync")
+    dead = simulate_wallclock(lat, n, args.trials, policy="deadline",
+                              deadline=1.5)
+    print(f"\nmodelled step time (Pareto tail): "
+          f"wait-for-all={sync['mean_step_time']:.3f}s   "
+          f"deadline={dead['mean_step_time']:.3f}s   "
+          f"(absorbing {dead['mean_stragglers']:.1f} stragglers/step "
+          f"as decode error)")
+    print("=> the paper's trade: bounded step time for a bounded, "
+          "decodable gradient error.")
+
+
+if __name__ == "__main__":
+    main()

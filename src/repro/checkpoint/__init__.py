@@ -1,0 +1,8 @@
+"""Atomic, resumable checkpointing."""
+
+from .checkpoint import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

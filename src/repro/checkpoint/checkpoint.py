@@ -1,0 +1,152 @@
+"""Checkpointing: atomic, step-tagged, resumable, optionally async.
+
+Layout:   <dir>/step_<N>/
+            manifest.json      (tree structure, shapes, dtypes, metadata)
+            arrays.npz         (flattened leaves, keyed by escaped path)
+Writes go to a tmp dir + os.replace for atomicity; keep_last prunes old
+steps; an async writer thread overlaps serialization with training.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _tree_structure(tree):
+    return jax.tree_util.tree_map(lambda _: 0, tree)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    metadata: Optional[dict] = None,
+                    keep_last: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, _ARRAYS), **flat)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": sorted(flat),
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _prune(directory, keep_last)
+    return final
+
+
+def _prune(directory: str, keep_last: int) -> None:
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(directory, d))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template: Any,
+                       step: Optional[int] = None) -> Tuple[Any, dict]:
+    """Restore into `template`'s structure.  Returns (tree, metadata)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, _ARRAYS))
+    flat_template = _flatten(template)
+    if sorted(flat_template) != manifest["keys"]:
+        missing = set(manifest["keys"]) ^ set(flat_template)
+        raise ValueError(f"checkpoint/template structure mismatch: {sorted(missing)[:5]}")
+    leaves_t, treedef = jax.tree_util.tree_flatten(template)
+    keys_in_order = []
+    for p, _ in jax.tree_util.tree_flatten_with_path(template)[0]:
+        keys_in_order.append("/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                                      for q in p))
+    new_leaves = []
+    for key, tleaf in zip(keys_in_order, leaves_t):
+        arr = data[key]
+        if hasattr(tleaf, "dtype"):
+            arr = arr.astype(tleaf.dtype)
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest["metadata"]
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: enqueue host copies, never block the step."""
+
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.directory = directory
+        self.keep_last = keep_last
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree, meta = item
+            try:
+                save_checkpoint(self.directory, step, tree, meta,
+                                self.keep_last)
+            except BaseException as e:  # surfaced on next save/close
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None):
+        if self._err:
+            raise self._err
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)  # device->host now
+        self._q.put((step, host_tree, metadata))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=10)

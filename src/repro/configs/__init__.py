@@ -1,0 +1,37 @@
+"""Architecture registry: one module per assigned architecture.
+
+Usage:  cfg = repro.configs.get_config("dbrx-132b")
+        ids = repro.configs.list_archs()
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models import ArchConfig, reduce_for_smoke
+
+_MODULES: Dict[str, str] = {
+    "internvl2-76b": "internvl2_76b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "dbrx-132b": "dbrx_132b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen1.5-32b": "qwen15_32b",
+    "starcoder2-7b": "starcoder2_7b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "minicpm-2b": "minicpm_2b",
+    "rwkv6-3b": "rwkv6_3b",
+    "whisper-large-v3": "whisper_large_v3",
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {list_archs()}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg = mod.config()
+    return reduce_for_smoke(cfg) if smoke else cfg

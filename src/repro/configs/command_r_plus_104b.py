@@ -1,0 +1,23 @@
+"""command-r-plus-104b [dense] — GQA, no-bias [hf:CohereForAI family].
+
+64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000.
+"""
+
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="command-r-plus-104b",
+        family="dense",
+        n_layers=64,
+        d_model=12288,
+        n_heads=96,
+        n_kv=8,
+        d_head=128,
+        d_ff=33792,
+        vocab=256000,
+        qkv_bias=False,
+        act="swiglu",
+        norm="layernorm",
+    )

@@ -1,0 +1,30 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained [hf:databricks/dbrx-base].
+
+40L d_model=6144 48H (GQA kv=8) d_ff=10752/expert vocab=100352, MoE 16e
+top-4.  16 experts == 16-way model axis -> clean expert parallelism.
+"""
+
+from repro.models import ArchConfig, MoEConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="dbrx-132b",
+        family="moe",
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv=8,
+        d_head=128,
+        d_ff=10752,
+        vocab=100352,
+        moe=MoEConfig(
+            num_experts=16,
+            top_k=4,
+            d_ff_expert=10752,
+            expert_shard="ep",
+        ),
+        act="swiglu",
+        norm="rmsnorm",
+        rope_theta=5e5,
+    )

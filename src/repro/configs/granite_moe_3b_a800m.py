@@ -1,0 +1,31 @@
+"""granite-moe-3b-a800m [moe] — 40 experts top-8, fine-grained
+[hf:ibm-granite/granite-3.0-1b-a400m-base family].
+
+32L d_model=1536 24H (GQA kv=8) d_ff=512/expert vocab=49155, MoE 40e
+top-8.  40 experts do not divide the 16-way model axis, so experts are
+sharded *internally* (d_ff tensor-parallel) — see DESIGN.md Sec. 2.4.
+"""
+
+from repro.models import ArchConfig, MoEConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="granite-moe-3b-a800m",
+        family="moe",
+        n_layers=32,
+        d_model=1536,
+        n_heads=24,
+        n_kv=8,
+        d_head=64,
+        d_ff=512,
+        vocab=49155,
+        moe=MoEConfig(
+            num_experts=40,
+            top_k=8,
+            d_ff_expert=512,
+            expert_shard="tp",
+        ),
+        act="swiglu",
+        norm="rmsnorm",
+    )

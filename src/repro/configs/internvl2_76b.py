@@ -1,0 +1,28 @@
+"""internvl2-76b [vlm] — InternViT + InternLM2 backbone [arXiv:2404.16821].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.  The InternViT
+frontend is a stub: input_specs provide precomputed patch embeddings for a
+256-token visual prefix; the LM backbone (which dominates compute) is
+exact.
+"""
+
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="internvl2-76b",
+        family="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv=8,
+        d_head=128,
+        d_ff=28672,
+        vocab=128256,
+        frontend="patches",
+        frontend_tokens=256,
+        act="swiglu",
+        norm="rmsnorm",
+        rope_theta=1e6,
+    )

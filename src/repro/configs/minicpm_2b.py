@@ -1,0 +1,26 @@
+"""minicpm-2b [dense] — WSD schedule, llama-like arch [arXiv:2404.06395].
+
+40L d_model=2304 36H (MHA kv=36) d_ff=5760 vocab=122753.  Tied
+embeddings; the Warmup-Stable-Decay schedule is wired into the optimizer
+(repro.optim.schedules) via schedule="wsd".
+"""
+
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="minicpm-2b",
+        family="dense",
+        n_layers=40,
+        d_model=2304,
+        n_heads=36,
+        n_kv=36,
+        d_head=64,
+        d_ff=5760,
+        vocab=122753,
+        tie_embeddings=True,
+        act="swiglu",
+        norm="rmsnorm",
+        schedule="wsd",
+    )

@@ -1,0 +1,23 @@
+"""qwen1.5-32b [dense] — QKV bias [hf:Qwen/Qwen1.5 family].
+
+64L d_model=5120 40H (GQA kv=40, i.e. MHA) d_ff=27392 vocab=152064.
+"""
+
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen1.5-32b",
+        family="dense",
+        n_layers=64,
+        d_model=5120,
+        n_heads=40,
+        n_kv=40,
+        d_head=128,
+        d_ff=27392,
+        vocab=152064,
+        qkv_bias=True,
+        act="swiglu",
+        norm="rmsnorm",
+    )

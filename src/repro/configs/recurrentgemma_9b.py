@@ -1,0 +1,30 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attention, Griffin pattern
+[arXiv:2402.19427].
+
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000; repeating block
+pattern (rec, rec, attn) with a 2048-token sliding window on attention
+layers — decode state is O(1)+O(window), so the long_500k cell runs.
+"""
+
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="recurrentgemma-9b",
+        family="hybrid",
+        n_layers=38,
+        d_model=4096,
+        n_heads=16,
+        n_kv=1,
+        d_head=256,
+        d_ff=12288,
+        vocab=256000,
+        block_pattern=("rec", "rec", "attn"),
+        local_window=2048,
+        rnn_width=4096,
+        conv_width=4,
+        act="geglu",
+        norm="rmsnorm",
+        logit_softcap=30.0,
+    )

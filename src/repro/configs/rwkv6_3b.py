@@ -1,0 +1,25 @@
+"""rwkv6-3b [ssm] — Finch, data-dependent decay [arXiv:2404.05892].
+
+32L d_model=2560 (attention-free) d_ff=8960 vocab=65536.  Head size 64
+(-> 40 wkv heads).  Decode is O(1) state update, so long_500k runs.
+"""
+
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="rwkv6-3b",
+        family="ssm",
+        n_layers=32,
+        d_model=2560,
+        n_heads=40,
+        n_kv=40,
+        d_head=64,
+        d_ff=8960,
+        vocab=65536,
+        block_pattern=("rwkv",),
+        rope_theta=0.0,
+        act="swiglu",          # used by channel-mix ffn sizing only
+        norm="layernorm",
+    )

@@ -1,0 +1,24 @@
+"""starcoder2-7b [dense] — GQA, RoPE [arXiv:2402.19173].
+
+32L d_model=4608 36H (GQA kv=4) d_ff=18432 vocab=49152.  Plain GeLU MLP +
+LayerNorm + biases, per the paper.
+"""
+
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="starcoder2-7b",
+        family="dense",
+        n_layers=32,
+        d_model=4608,
+        n_heads=36,
+        n_kv=4,
+        d_head=128,
+        d_ff=18432,
+        vocab=49152,
+        qkv_bias=True,
+        act="gelu",
+        norm="layernorm",
+    )

@@ -1,0 +1,29 @@
+"""whisper-large-v3 [audio] — enc-dec, conv frontend (stub) [arXiv:2212.04356].
+
+32L(enc)+32L(dec) d_model=1280 20H (MHA kv=20) d_ff=5120 vocab=51866.
+The mel+conv1d stem is a stub: input_specs provide precomputed frame
+embeddings [B, T, d_model].  Sinusoidal positions (no RoPE), LayerNorm,
+GeLU, biases.
+"""
+
+from repro.models import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-large-v3",
+        family="encdec",
+        n_layers=32,
+        encoder_layers=32,
+        d_model=1280,
+        n_heads=20,
+        n_kv=20,
+        d_head=64,
+        d_ff=5120,
+        vocab=51866,
+        qkv_bias=True,
+        rope_theta=0.0,
+        frontend="frames",
+        act="gelu",
+        norm="layernorm",
+    )

@@ -1,0 +1,36 @@
+"""Approximate gradient coding via sparse random graphs — core library.
+
+Implements the paper's contribution: gradient-code constructions
+(FRC / BGC / rBGC / s-regular / cyclic), decoders (one-step / optimal /
+algorithmic), adversarial straggler analysis, closed-form theory, and the
+Monte-Carlo simulation engine, plus the assignment layer that couples a
+code to a physical data-parallel batch.
+"""
+
+from .codes import (  # noqa: F401
+    CODE_REGISTRY,
+    GradientCode,
+    bgc,
+    cyclic_repetition,
+    frc,
+    make_code,
+    rbgc,
+    spectral_gap,
+    sregular,
+    uncoded,
+)
+from .decoding import (  # noqa: F401
+    algorithmic_error_curve,
+    algorithmic_weights,
+    apply_weights,
+    decode_weights,
+    default_rho,
+    err,
+    err1,
+    onestep_decode,
+    onestep_weights,
+    optimal_decode,
+    optimal_weights,
+)
+from .assignment import CodedAssignment, build_assignment  # noqa: F401
+from . import adversary, simulate, theory  # noqa: F401

@@ -1,0 +1,217 @@
+"""Gradient-code constructions (assignment matrices G).
+
+The paper's objects: a k x n *function assignment matrix* G whose column j
+supports the tasks computed by worker j, with entries giving the linear
+combination the worker returns.  All constructions here are O(k * n) or
+better, which is the paper's selling point versus Ramanujan/expander
+constructions.
+
+Conventions
+-----------
+* G has shape (k, n): k tasks (gradient partitions), n workers.
+* Column sparsity ~ s tasks per worker.
+* All constructions are deterministic given a seed.
+* Matrices are small (k, n <= a few thousand) and kept as dense float64
+  numpy arrays; the training path consumes them as constants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+__all__ = [
+    "GradientCode",
+    "frc",
+    "bgc",
+    "rbgc",
+    "sregular",
+    "cyclic_repetition",
+    "uncoded",
+    "make_code",
+    "CODE_REGISTRY",
+    "spectral_gap",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientCode:
+    """An assignment matrix plus the metadata the runtime needs."""
+
+    name: str
+    G: np.ndarray  # (k, n)
+    s: int  # nominal tasks/worker (column sparsity target)
+    seed: Optional[int] = None
+
+    @property
+    def k(self) -> int:
+        return int(self.G.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.G.shape[1])
+
+    @property
+    def max_col_degree(self) -> int:
+        return int((self.G != 0).sum(axis=0).max())
+
+    @property
+    def col_degrees(self) -> np.ndarray:
+        return (self.G != 0).sum(axis=0)
+
+    @property
+    def row_degrees(self) -> np.ndarray:
+        return (self.G != 0).sum(axis=1)
+
+    def nonstraggler_submatrix(self, mask: np.ndarray) -> np.ndarray:
+        """A = columns of G belonging to the non-stragglers (mask==True)."""
+        mask = np.asarray(mask, dtype=bool)
+        if mask.shape != (self.n,):
+            raise ValueError(f"mask shape {mask.shape} != ({self.n},)")
+        return self.G[:, mask]
+
+    def with_workers(self, n: int, rng: np.random.Generator) -> "GradientCode":
+        """Rebuild the same family for a different worker count (elastic)."""
+        fam = self.name.split("(")[0]
+        return make_code(fam, k=n, n=n, s=self.s, rng=rng)
+
+
+def _check(k: int, n: int, s: int) -> None:
+    if k <= 0 or n <= 0:
+        raise ValueError(f"k={k}, n={n} must be positive")
+    if not (1 <= s <= k):
+        raise ValueError(f"s={s} must be in [1, k={k}]")
+
+
+def frc(k: int, n: int, s: int, rng: Optional[np.random.Generator] = None) -> GradientCode:
+    """Fractional Repetition Code (paper Sec. 3, from Tandon et al.).
+
+    Block-diagonal 1_{s x s} blocks: k tasks and n=k workers, s | k.  Block
+    b's s workers each compute the same s tasks.  A random column
+    permutation is applied when an rng is provided (the adversarial
+    analysis in Sec. 4.1 is permutation-invariant; tests exercise both).
+    """
+    _check(k, n, s)
+    if n != k:
+        raise ValueError(f"FRC requires n == k (got k={k}, n={n})")
+    if k % s != 0:
+        raise ValueError(f"FRC requires s | k (got k={k}, s={s})")
+    G = np.zeros((k, n), dtype=np.float64)
+    for b in range(k // s):
+        G[b * s : (b + 1) * s, b * s : (b + 1) * s] = 1.0
+    if rng is not None:
+        G = G[:, rng.permutation(n)]
+    return GradientCode(name="frc", G=G, s=s, seed=None)
+
+
+def bgc(k: int, n: int, s: int, rng: np.random.Generator) -> GradientCode:
+    """Bernoulli Gradient Code (paper Sec. 5): G_ij ~ Bernoulli(s/k)."""
+    _check(k, n, s)
+    G = (rng.random((k, n)) < (s / k)).astype(np.float64)
+    return GradientCode(name="bgc", G=G, s=s)
+
+
+def rbgc(k: int, n: int, s: int, rng: np.random.Generator) -> GradientCode:
+    """Regularized BGC (paper Algorithm 3).
+
+    Draw Bernoulli(s/k) entries; any column with degree > 2s is pruned
+    (random edges removed) until its degree is exactly s.  Guarantees
+    max column degree <= 2s so Thm 24's bound applies for all s >= 1.
+    """
+    _check(k, n, s)
+    G = (rng.random((k, n)) < (s / k)).astype(np.float64)
+    for j in range(n):
+        d = int(G[:, j].sum())
+        if d > 2 * s:
+            support = np.flatnonzero(G[:, j])
+            drop = rng.choice(support, size=d - s, replace=False)
+            G[drop, j] = 0.0
+    return GradientCode(name="rbgc", G=G, s=s)
+
+
+def sregular(k: int, n: int, s: int, rng: np.random.Generator) -> GradientCode:
+    """Random s-regular graph adjacency code (Raviv et al. baseline).
+
+    G = adjacency matrix of a random simple s-regular graph on k vertices
+    (k == n).  Random regular graphs are expanders with high probability
+    (lambda -> 2 sqrt(s-1), near-Ramanujan) so this is the efficient
+    stand-in for the expander-code baseline, exactly as in the paper's
+    simulations (Sec. 6).
+    """
+    _check(k, n, s)
+    if n != k:
+        raise ValueError(f"s-regular code requires n == k (got k={k}, n={n})")
+    if (k * s) % 2 != 0:
+        raise ValueError(f"s-regular graph needs k*s even (k={k}, s={s})")
+    if s >= k:
+        raise ValueError(f"need s < k (s={s}, k={k})")
+    import networkx as nx
+
+    g = nx.random_regular_graph(d=s, n=k, seed=int(rng.integers(2**31 - 1)))
+    G = nx.to_numpy_array(g, dtype=np.float64)
+    return GradientCode(name="sregular", G=G, s=s)
+
+
+def cyclic_repetition(k: int, n: int, s: int, rng: Optional[np.random.Generator] = None) -> GradientCode:
+    """Cyclic support code: worker j computes tasks {j, j+1, ..., j+s-1} mod k.
+
+    The support pattern of Tandon et al.'s cyclic codes with all-ones
+    coefficients; a deterministic, load-balanced baseline whose one-step
+    decoding behaves like a circulant smoothing operator.
+    """
+    _check(k, n, s)
+    G = np.zeros((k, n), dtype=np.float64)
+    cols = np.arange(n)
+    for off in range(s):
+        G[(cols * k // n + off) % k, cols] = 1.0
+    return GradientCode(name="cyclic", G=G, s=s)
+
+
+def uncoded(k: int, n: Optional[int] = None, s: int = 1,
+            rng: Optional[np.random.Generator] = None) -> GradientCode:
+    """Identity assignment: worker j computes task j only (no redundancy)."""
+    n = k if n is None else n
+    if n != k:
+        raise ValueError("uncoded requires n == k")
+    return GradientCode(name="uncoded", G=np.eye(k, dtype=np.float64), s=1)
+
+
+CODE_REGISTRY: Dict[str, Callable[..., GradientCode]] = {
+    "frc": frc,
+    "bgc": bgc,
+    "rbgc": rbgc,
+    "sregular": sregular,
+    "cyclic": cyclic_repetition,
+    "uncoded": uncoded,
+}
+
+
+def make_code(
+    name: str,
+    k: int,
+    n: int,
+    s: int,
+    rng: Optional[np.random.Generator] = None,
+    seed: Optional[int] = None,
+) -> GradientCode:
+    """Factory used by configs / CLI: make_code('bgc', k=128, n=128, s=5)."""
+    if name not in CODE_REGISTRY:
+        raise KeyError(f"unknown code {name!r}; have {sorted(CODE_REGISTRY)}")
+    if rng is None:
+        rng = np.random.default_rng(0 if seed is None else seed)
+    return CODE_REGISTRY[name](k, n, s, rng=rng)
+
+
+def spectral_gap(code: GradientCode) -> float:
+    """lambda(G) = max(|lambda_2|, |lambda_k|) for (square, symmetric) G.
+
+    Used by theory.thm3_expander_bound.  Only meaningful for graph-
+    adjacency codes (sregular); raises otherwise.
+    """
+    G = code.G
+    if G.shape[0] != G.shape[1] or not np.allclose(G, G.T):
+        raise ValueError("spectral_gap requires a symmetric square G")
+    lam = np.linalg.eigvalsh(G)
+    return float(max(abs(lam[0]), abs(lam[-2])))

@@ -1,0 +1,204 @@
+"""Decoders: reconstruct (approximately) 1_k from the non-straggler matrix A.
+
+Three decoders from the paper:
+
+* one-step (Algorithm 1): v = rho * A @ 1_r.  O(nnz(A)), streaming.
+* optimal  (Algorithm 2): v = A @ argmin_x ||A x - 1_k||^2.  Least squares.
+* algorithmic (Lemma 12): u_t = (I - A A^T / nu) u_{t-1}, u_0 = 1_k.
+  ||u_t||^2 decreases monotonically to err(A); each iterate costs two
+  matvecs, interpolating between one-step and optimal decoding.
+
+All of these produce *decode weights* w in R^n (zero at stragglers) such
+that the master's reconstruction is  v = G @ w  and the decoded gradient
+is  sum_j w_j * (coded partial of worker j).  The training path consumes
+the weights; the error analyses consume v.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "err",
+    "err1",
+    "onestep_weights",
+    "onestep_decode",
+    "optimal_weights",
+    "optimal_decode",
+    "algorithmic_weights",
+    "algorithmic_error_curve",
+    "decode_weights",
+    "apply_weights",
+]
+
+
+def _as2d(A: np.ndarray) -> np.ndarray:
+    A = np.asarray(A, dtype=np.float64)
+    if A.ndim != 2:
+        raise ValueError(f"expected 2-D matrix, got shape {A.shape}")
+    return A
+
+
+def err(A: np.ndarray) -> float:
+    """Optimal decoding error err(A) = min_x ||A x - 1_k||_2^2 (Def. 1)."""
+    A = _as2d(A)
+    k = A.shape[0]
+    ones = np.ones(k)
+    if A.shape[1] == 0:
+        return float(k)
+    x, _, _, _ = np.linalg.lstsq(A, ones, rcond=None)
+    res = A @ x - ones
+    return float(res @ res)
+
+
+def err1(A: np.ndarray, rho: float) -> float:
+    """One-step decoding error err_1(A) = ||rho * A 1_r - 1_k||_2^2 (Def. 2)."""
+    A = _as2d(A)
+    k = A.shape[0]
+    v = rho * A.sum(axis=1) - np.ones(k)
+    return float(v @ v)
+
+
+def default_rho(k: int, r: int, s: int) -> float:
+    """The paper's canonical rho = k / (r s)."""
+    if r == 0:
+        return 0.0
+    return k / (r * s)
+
+
+def onestep_weights(G: np.ndarray, mask: np.ndarray, rho: Optional[float] = None,
+                    s: Optional[int] = None) -> np.ndarray:
+    """Decode weights for Algorithm 1: w_j = rho if j is a non-straggler.
+
+    rho defaults to k/(r s) with s inferred from G's mean column degree
+    if not given.
+    """
+    G = _as2d(G)
+    mask = np.asarray(mask, dtype=bool)
+    k, n = G.shape
+    r = int(mask.sum())
+    if rho is None:
+        if s is None:
+            s = max(1, int(round((G != 0).sum() / max(n, 1))))
+        rho = default_rho(k, r, s)
+    return rho * mask.astype(np.float64)
+
+
+def onestep_decode(G: np.ndarray, mask: np.ndarray, rho: Optional[float] = None,
+                   s: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+    """(v, w): reconstruction v = G @ w and the weights, Algorithm 1."""
+    w = onestep_weights(G, mask, rho=rho, s=s)
+    return _as2d(G) @ w, w
+
+
+def optimal_weights(G: np.ndarray, mask: np.ndarray, ridge: float = 0.0) -> np.ndarray:
+    """Decode weights for Algorithm 2 embedded in R^n (zeros at stragglers).
+
+    Solves min_x ||A x - 1_k||^2 (+ ridge ||x||^2) over the non-straggler
+    columns A.  With ridge=0 this is the pseudo-inverse solution
+    x = A^+ 1_k; a tiny ridge stabilizes ill-conditioned A (the paper
+    notes one-step decoding is preferred exactly when A is
+    ill-conditioned).
+    """
+    G = _as2d(G)
+    mask = np.asarray(mask, dtype=bool)
+    k, n = G.shape
+    A = G[:, mask]
+    w = np.zeros(n)
+    if A.shape[1] == 0:
+        return w
+    ones = np.ones(k)
+    if ridge > 0.0:
+        r = A.shape[1]
+        x = np.linalg.solve(A.T @ A + ridge * np.eye(r), A.T @ ones)
+    else:
+        x, _, _, _ = np.linalg.lstsq(A, ones, rcond=None)
+    w[mask] = x
+    return w
+
+
+def optimal_decode(G: np.ndarray, mask: np.ndarray, ridge: float = 0.0
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """(v, w) for Algorithm 2."""
+    w = optimal_weights(G, mask, ridge=ridge)
+    return _as2d(G) @ w, w
+
+
+def _spectral_norm_sq(A: np.ndarray) -> float:
+    if min(A.shape) == 0:
+        return 1.0
+    return float(np.linalg.norm(A, 2) ** 2)
+
+
+def algorithmic_weights(G: np.ndarray, mask: np.ndarray, iters: int,
+                        nu: Optional[float] = None) -> np.ndarray:
+    """Decode weights after `iters` steps of the Lemma-12 iteration.
+
+    u_t = (I - A A^T/nu) u_{t-1};  the reconstruction after t steps is
+    v_t = 1_k - u_t = A x_t  with  x_t = (1/nu) sum_{j<t} A^T u_j,  so the
+    weights are x_t scattered into R^n.  iters=1 with nu = r s^2 / k
+    recovers (a scaled) one-step decode; iters -> inf recovers optimal.
+    """
+    G = _as2d(G)
+    mask = np.asarray(mask, dtype=bool)
+    k, n = G.shape
+    A = G[:, mask]
+    w = np.zeros(n)
+    if A.shape[1] == 0 or iters <= 0:
+        return w
+    if nu is None:
+        nu = _spectral_norm_sq(A)
+    u = np.ones(k)
+    x = np.zeros(A.shape[1])
+    for _ in range(iters):
+        x = x + (A.T @ u) / nu
+        u = u - (A @ (A.T @ u)) / nu
+    w[mask] = x
+    return w
+
+
+def algorithmic_error_curve(A: np.ndarray, iters: int, nu: Optional[float] = None
+                            ) -> np.ndarray:
+    """[||u_0||^2, ..., ||u_iters||^2] — the Fig.-5 curve (monotone to err(A))."""
+    A = _as2d(A)
+    k = A.shape[0]
+    if nu is None:
+        nu = _spectral_norm_sq(A)
+    u = np.ones(k)
+    out = [float(u @ u)]
+    for _ in range(iters):
+        if A.shape[1]:
+            u = u - (A @ (A.T @ u)) / nu
+        out.append(float(u @ u))
+    return np.asarray(out)
+
+
+def decode_weights(G: np.ndarray, mask: np.ndarray, method: str = "onestep",
+                   **kw) -> np.ndarray:
+    """Unified entry point used by the training runtime."""
+    if method == "onestep":
+        return onestep_weights(G, mask, **kw)
+    if method == "optimal":
+        return optimal_weights(G, mask, **kw)
+    if method == "algorithmic":
+        return algorithmic_weights(G, mask, **kw)
+    if method == "ignore":  # ignore-stragglers baseline: average what arrived
+        mask = np.asarray(mask, dtype=bool)
+        G = _as2d(G)
+        k = G.shape[0]
+        # scale so that E[v] ~ 1_k when row coverage is uniform
+        cover = (G[:, mask] != 0).sum()
+        return mask * (k / max(cover, 1))
+    raise ValueError(f"unknown decode method {method!r}")
+
+
+def apply_weights(partials: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Master-side reference decode: partials (n, d) -> sum_j w_j partials_j.
+
+    This is the explicit 'gather to master then combine' path the tests
+    compare against the all-reduce-fused training implementation.
+    """
+    partials = np.asarray(partials)
+    return np.tensordot(w, partials, axes=(0, 0))

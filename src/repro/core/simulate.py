@@ -1,0 +1,136 @@
+"""Monte-Carlo simulation engine for decoding errors (paper Sec. 6).
+
+Reproduces the quantities in Figs. 2-5: average err_1(A)/k and err(A)/k
+over random straggler draws, and the algorithmic-decoder curve ||u_t||^2/k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from . import codes as codes_lib
+from . import decoding
+
+__all__ = [
+    "sample_straggler_mask",
+    "MCResult",
+    "monte_carlo_error",
+    "sweep_delta",
+    "algorithmic_curve_mc",
+]
+
+
+def sample_straggler_mask(n: int, num_stragglers: int, rng: np.random.Generator
+                          ) -> np.ndarray:
+    """Uniform without-replacement straggler draw -> boolean keep-mask."""
+    mask = np.ones(n, dtype=bool)
+    if num_stragglers > 0:
+        mask[rng.choice(n, size=num_stragglers, replace=False)] = False
+    return mask
+
+
+@dataclasses.dataclass
+class MCResult:
+    scheme: str
+    decoder: str
+    k: int
+    n: int
+    s: int
+    delta: float
+    trials: int
+    mean: float  # mean err/k
+    std: float
+    q05: float
+    q95: float
+    p_zero: float  # fraction of trials with (near-)zero error
+
+
+def _one_trial_error(G: np.ndarray, mask: np.ndarray, decoder: str, s: int,
+                     iters: int = 8) -> float:
+    k = G.shape[0]
+    A = G[:, mask]
+    r = int(mask.sum())
+    if decoder == "onestep":
+        return decoding.err1(A, decoding.default_rho(k, r, s))
+    if decoder == "optimal":
+        return decoding.err(A)
+    if decoder == "algorithmic":
+        return float(decoding.algorithmic_error_curve(A, iters)[-1])
+    raise ValueError(decoder)
+
+
+def monte_carlo_error(
+    scheme: str,
+    k: int,
+    n: int,
+    s: int,
+    delta: float,
+    trials: int,
+    decoder: str = "onestep",
+    seed: int = 0,
+    resample_code: bool = True,
+    iters: int = 8,
+) -> MCResult:
+    """Average decoding error over `trials` random straggler draws.
+
+    resample_code=True redraws the (random) code each trial, matching the
+    paper's averaging over both code and straggler randomness; FRC/cyclic
+    are deterministic so this only matters for bgc/rbgc/sregular.
+    """
+    rng = np.random.default_rng(seed)
+    num_straggle = int(round(delta * n))
+    code = codes_lib.make_code(scheme, k=k, n=n, s=s, rng=rng)
+    errs = np.empty(trials)
+    for t in range(trials):
+        if resample_code and scheme in ("bgc", "rbgc", "sregular"):
+            code = codes_lib.make_code(scheme, k=k, n=n, s=s, rng=rng)
+        mask = sample_straggler_mask(n, num_straggle, rng)
+        errs[t] = _one_trial_error(code.G, mask, decoder, s, iters=iters)
+    errs = errs / k
+    return MCResult(
+        scheme=scheme, decoder=decoder, k=k, n=n, s=s, delta=delta,
+        trials=trials, mean=float(errs.mean()), std=float(errs.std()),
+        q05=float(np.quantile(errs, 0.05)), q95=float(np.quantile(errs, 0.95)),
+        p_zero=float((errs < 1e-9).mean()),
+    )
+
+
+def sweep_delta(
+    schemes: Sequence[str],
+    deltas: Sequence[float],
+    k: int,
+    s: int,
+    trials: int,
+    decoder: str = "onestep",
+    seed: int = 0,
+) -> List[MCResult]:
+    out: List[MCResult] = []
+    for scheme in schemes:
+        for d in deltas:
+            out.append(monte_carlo_error(scheme, k=k, n=k, s=s, delta=d,
+                                         trials=trials, decoder=decoder,
+                                         seed=seed))
+    return out
+
+
+def algorithmic_curve_mc(
+    scheme: str,
+    k: int,
+    s: int,
+    delta: float,
+    trials: int,
+    iters: int,
+    seed: int = 0,
+) -> np.ndarray:
+    """Mean ||u_t||^2/k curve, t = 0..iters (Fig. 5)."""
+    rng = np.random.default_rng(seed)
+    num_straggle = int(round(delta * k))
+    acc = np.zeros(iters + 1)
+    for _ in range(trials):
+        code = codes_lib.make_code(scheme, k=k, n=k, s=s, rng=rng)
+        mask = sample_straggler_mask(k, num_straggle, rng)
+        acc += decoding.algorithmic_error_curve(code.G[:, mask], iters)
+    return acc / (trials * k)

@@ -1,0 +1,175 @@
+"""Closed-form results from the paper, used to validate Monte-Carlo runs.
+
+Every function cites its theorem.  Combinatorial quantities use exact
+integer arithmetic (math.comb) and return floats.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+__all__ = [
+    "thm5_expected_err1_frc",
+    "thm5_expected_err1_frc_exact",
+    "thm6_expected_err_frc",
+    "thm6_expected_err_frc_as_printed",
+    "thm7_tail_frc",
+    "thm8_s_threshold",
+    "cor9_s_zero_error",
+    "thm10_frc_worstcase_err",
+    "thm3_expander_err1_bound",
+    "thm21_bgc_err1_bound",
+    "thm24_rbgc_err1_bound",
+    "lemma4_expected_gram_frc",
+    "expected_err1_bgc_exact",
+]
+
+
+def thm5_expected_err1_frc(k: int, s: int, delta: float) -> float:
+    """Theorem 5: E[err_1(A_frac)] with rho = k/(rs), r = (1-delta)k.
+
+    E = delta*k / ((1-delta)*s) - (1/(1-delta)) * (s-1)/s
+    """
+    if not (0 <= delta < 1):
+        raise ValueError("delta in [0,1)")
+    return delta * k / ((1 - delta) * s) - (s - 1) / (s * (1 - delta))
+
+
+def thm5_expected_err1_frc_exact(k: int, s: int, r: int) -> float:
+    """Corrected (exact) version of Theorem 5.
+
+    The paper's Lemma 4 states P(a_j duplicates a_i) = (s-1)/k, but under
+    *without replacement* column sampling the exact probability is
+    (s-1)/(k-1) — there are s-1 duplicates among the k-1 remaining
+    columns.  Propagating through the Theorem-5 algebra:
+
+        E[err_1] = (k^2/(r^2 s^2)) * ( r s + r (r-1) s (s-1) / (k-1) ) - k.
+
+    Monte Carlo matches this form to sampling error (see
+    tests/test_theory_mc.py); the paper's stated formula is its k -> inf
+    limit and understates the error by Theta(1) for finite k (documented
+    in EXPERIMENTS.md).
+    """
+    if r == 0:
+        return float(k)
+    return (k**2 / (r**2 * s**2)) * (r * s + r * (r - 1) * s * (s - 1) / (k - 1)) - k
+
+
+def thm6_expected_err_frc(k: int, s: int, r: int) -> float:
+    """Theorem 6 (corrected): E[err(A_frac)] = k * C(k-s, r) / C(k, r).
+
+    The paper prints C(k-s, r-s)/C(k, r), but P(block i fully straggled)
+    = P(all r non-stragglers drawn from the other k-s columns)
+    = C(k-s, r)/C(k, r) — which is also what the paper's own Theorem 7
+    uses with alpha+1 = 1.  Monte Carlo and the exact inclusion-exclusion
+    pmf (frc_err_distribution) confirm the corrected form; see
+    EXPERIMENTS.md errata."""
+    if k - s < r:
+        return 0.0
+    return k * math.comb(k - s, r) / math.comb(k, r)
+
+
+def thm6_expected_err_frc_as_printed(k: int, s: int, r: int) -> float:
+    """The formula exactly as printed in the paper (for the errata bench)."""
+    if r < s:
+        return float(k)
+    return k * math.comb(k - s, r - s) / math.comb(k, r)
+
+
+def thm7_tail_frc(k: int, s: int, r: int, alpha: int) -> float:
+    """Theorem 7: upper bound on P(err(A_frac) > alpha*s).
+
+    P <= C(k/s, alpha+1) * C(k-(alpha+1)s, r) / C(k, r).
+    """
+    if k % s:
+        raise ValueError("FRC needs s | k")
+    top = k - (alpha + 1) * s
+    if top < r:
+        return 0.0
+    bound = math.comb(k // s, alpha + 1) * math.comb(top, r) / math.comb(k, r)
+    return min(1.0, bound)
+
+
+def thm8_s_threshold(k: int, delta: float, alpha: int) -> float:
+    """Theorem 8: s >= (1 + 1/(1+alpha)) log(k)/(1-delta) gives
+    P(err > alpha*s) <= 1/k."""
+    return (1 + 1 / (1 + alpha)) * math.log(k) / (1 - delta)
+
+
+def cor9_s_zero_error(k: int, delta: float) -> float:
+    """Corollary 9: s >= 2 log(k)/(1-delta) gives P(err > 0) <= 1/k."""
+    return 2 * math.log(k) / (1 - delta)
+
+
+def thm10_frc_worstcase_err(k: int, r: int) -> float:
+    """Theorem 10: adversarial optimal-decoding error of FRC is k - r."""
+    return float(k - r)
+
+
+def thm3_expander_err1_bound(k: int, s: int, delta: float, lam: float) -> float:
+    """Raviv et al. bound (as stated in Sec. 6):
+    err_1(A) <= (lam(G)^2 / s^2) * delta*k / (1-delta), for any delta*k
+    stragglers (worst case)."""
+    return (lam**2 / s**2) * delta * k / (1 - delta)
+
+
+def thm21_bgc_err1_bound(k: int, s: int, delta: float, c: float = 1.0) -> float:
+    """Theorem 21 shape: err_1(A) <= C^2 k / ((1-delta) s), s >= log k.
+
+    C is the universal constant from concentration (Lemma 18); pass the
+    empirically calibrated value via `c` when comparing to Monte Carlo.
+    """
+    return c**2 * k / ((1 - delta) * s)
+
+
+def thm24_rbgc_err1_bound(k: int, s: int, delta: float, alpha: float = 1.0,
+                          c: float = 1.0) -> float:
+    """Theorem 24 shape: err_1(A') <= C^2 alpha^3 k / ((1-delta) s), all s>=1."""
+    return c**2 * alpha**3 * k / ((1 - delta) * s)
+
+
+def lemma4_expected_gram_frc(k: int, s: int) -> tuple[float, float]:
+    """Lemma 4: E[a_i . a_j] = s (i==j) and s^2/k - s/k (i != j)."""
+    return float(s), s**2 / k - s / k
+
+
+def expected_err1_bgc_exact(k: int, s: int, r: int) -> float:
+    """Exact E[err_1(A)] for the (unregularized) BGC with rho = k/(rs).
+
+    Derivation (not in the paper; used to sanity-check simulations):
+    entries iid Bernoulli(p), p = s/k.  With v = rho * A 1_r,
+    E[||v - 1||^2] = k * (rho^2 * (r*p*(1-p) + (r*p)^2) - 2*rho*r*p + 1).
+    """
+    p = s / k
+    if r == 0:
+        return float(k)
+    rho = k / (r * s)
+    m2 = r * p * (1 - p) + (r * p) ** 2  # E[(row sum)^2]
+    return k * (rho**2 * m2 - 2 * rho * r * p + 1)
+
+
+def frc_err_distribution(k: int, s: int, r: int, max_alpha: int | None = None
+                         ) -> np.ndarray:
+    """Exact pmf of err(A_frac)/s = number of missing blocks (inclusion-
+    exclusion over the k/s blocks under without-replacement sampling).
+
+    P(exactly m blocks missing) = C(B, m) * sum_{j} (-1)^j C(B-m, j)
+        * C(k-(m+j)s, r) / C(k, r),   B = k/s.
+    """
+    if k % s:
+        raise ValueError("s | k required")
+    B = k // s
+    max_alpha = B if max_alpha is None else min(max_alpha, B)
+    denom = math.comb(k, r)
+    pmf = np.zeros(max_alpha + 1)
+    for m in range(max_alpha + 1):
+        acc = 0.0
+        for j in range(B - m + 1):
+            top = k - (m + j) * s
+            if top < r:
+                break
+            acc += (-1) ** j * math.comb(B - m, j) * math.comb(top, r) / denom
+        pmf[m] = math.comb(B, m) * acc
+    return np.clip(pmf, 0.0, 1.0)

@@ -1,0 +1,3 @@
+"""Coded data pipeline."""
+
+from .pipeline import CodedDataPipeline, PipelineConfig  # noqa: F401

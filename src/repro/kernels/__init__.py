@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Six kernels, each `pl.pallas_call` + explicit BlockSpec VMEM tiling,
+validated in interpret mode against the pure-jnp oracles in ref.py:
+
+    flash_attention     32k-prefill attention (online softmax, block skip)
+    rglru_scan          RG-LRU diagonal linear recurrence (recurrentgemma)
+    rwkv6_wkv           chunked data-dependent-decay WKV (rwkv6)
+    coded_accumulate    worker-side sum_i G[i,j] g_i / master-side decode
+    onestep_decode      Algorithm 1: v = rho * A 1_r (streaming row-sum)
+    algorithmic_decode  Lemma 12 iterates u_t (decode accuracy/cost dial)
+
+Use via repro.kernels.ops with impl in {"xla", "pallas",
+"pallas_interpret"}.
+"""
+
+from . import ops  # noqa: F401
+from . import ref  # noqa: F401
+from .algorithmic_decode import algorithmic_decode, algorithmic_iterate  # noqa: F401
+from .coded_accumulate import coded_accumulate  # noqa: F401
+from .flash_attention import flash_attention  # noqa: F401
+from .onestep_decode import onestep_decode  # noqa: F401
+from .rglru_scan import rglru_scan  # noqa: F401
+from .rwkv6_wkv import rwkv6_wkv  # noqa: F401

@@ -1,0 +1,79 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+`impl` convention (shared with ArchConfig.attn_impl / seq_impl):
+    "xla"              : pure-jnp reference path (production CPU dry-run)
+    "pallas"           : compiled Pallas kernel (TPU target)
+    "pallas_interpret" : kernel body interpreted on CPU (tests / this box)
+
+Every wrapper is shape/dtype-polymorphic and numerically validated
+against repro.kernels.ref in tests/test_kernels_pallas.py.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .algorithmic_decode import algorithmic_decode as _algorithmic_pallas
+from .coded_accumulate import coded_accumulate as _accumulate_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .onestep_decode import onestep_decode as _onestep_pallas
+from .rglru_scan import rglru_scan as _rglru_pallas
+from .rwkv6_wkv import rwkv6_wkv as _wkv_pallas
+
+__all__ = [
+    "attention", "rglru_scan", "rwkv6_wkv",
+    "coded_accumulate", "onestep_decode", "algorithmic_decode",
+]
+
+
+def _interp(impl: str) -> bool:
+    return impl == "pallas_interpret"
+
+
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset=0,
+              impl="pallas", bq=128, bk=128):
+    if impl == "xla":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, q_offset=q_offset)
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         softcap=softcap, q_offset=q_offset,
+                         bq=bq, bk=bk, interpret=_interp(impl))
+
+
+def rglru_scan(u, log_a, h0=None, *, impl="pallas", chunk=128, bd=128):
+    if impl == "xla":
+        return _ref.rglru_scan_ref(u, log_a, h0)
+    return _rglru_pallas(u, log_a, h0, chunk=chunk, bd=bd,
+                         interpret=_interp(impl))
+
+
+def rwkv6_wkv(r, k, v, w, u, s0=None, *, impl="pallas", chunk=32):
+    if impl == "xla":
+        return _ref.wkv_ref(r, k, v, w, u, s0)
+    return _wkv_pallas(r, k, v, w, u, s0, chunk=chunk,
+                       interpret=_interp(impl))
+
+
+def coded_accumulate(grads, weights, *, impl="pallas", bp=2048):
+    if impl == "xla":
+        return _ref.coded_accumulate_ref(grads, weights)
+    return _accumulate_pallas(grads, weights, bp=bp, interpret=_interp(impl))
+
+
+def onestep_decode(G, mask, rho, *, impl="pallas", bk=512, bn=512):
+    if impl == "xla":
+        return _ref.onestep_decode_ref(G, mask, rho)
+    return _onestep_pallas(G, mask, float(rho), bk=bk, bn=bn,
+                           interpret=_interp(impl))
+
+
+def algorithmic_decode(G, mask, nu, iters, *, impl="pallas", bk=512, bn=512):
+    if impl == "xla":
+        A = G * mask[None, :].astype(G.dtype)
+        return _ref.algorithmic_decode_ref(A, float(nu), int(iters))
+    return _algorithmic_pallas(G, mask, float(nu), int(iters), bk=bk, bn=bn,
+                               interpret=_interp(impl))

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernel (run with
+interpret=True on CPU, compiled on TPU) is asserted against in
+tests/test_kernels_*.py.  They are deliberately written in the most
+obvious O(n^2)/sequential form — clarity over speed.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "attention_ref", "rglru_scan_ref", "wkv_ref",
+    "coded_accumulate_ref", "onestep_decode_ref", "algorithmic_decode_ref",
+]
+
+_NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, q_offset: int = 0) -> jax.Array:
+    """Naive GQA attention.  q [B,Sq,H,dh], k/v [B,Sk,Kv,dh] -> [B,Sq,H,dh]."""
+    B, Sq, H, dh = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Sq, Kv, G, dh)
+    s = jnp.einsum("bqngd,bknd->bngqk", qg, k,
+                   preferred_element_type=jnp.float32) * dh ** -0.5
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(k.shape[1])
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    s = s + jnp.where(ok, 0.0, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bngqk,bknd->bqngd", p, v)
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def rglru_scan_ref(u: jax.Array, log_a: jax.Array,
+                   h0: Optional[jax.Array] = None) -> jax.Array:
+    """Sequential linear recurrence h_t = exp(log_a_t) * h_{t-1} + u_t.
+
+    u, log_a: [B, S, D] float32; h0 optional [B, D].  Returns h [B, S, D].
+    """
+    B, S, D = u.shape
+    h_init = jnp.zeros((B, D), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        la_t, u_t = inp
+        h = jnp.exp(la_t) * h + u_t
+        return h, h
+
+    xs = (jnp.moveaxis(log_a.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(u.astype(jnp.float32), 1, 0))
+    _, hs = jax.lax.scan(step, h_init, xs)
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def wkv_ref(r, k, v, w, u, s0=None):
+    """Sequential RWKV6 WKV recurrence (see models.rwkv6.wkv_scan_ref).
+
+    r,k,v,w: [B,T,H,dh]; u: [H,dh].  Returns (o [B,T,H,dh], s [B,H,dh,dh]).
+    """
+    B, T, H, dh = r.shape
+    s = jnp.zeros((B, H, dh, dh), jnp.float32) if s0 is None else \
+        s0.astype(jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, o_t
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    s, o = jax.lax.scan(step, s, xs)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype), s
+
+
+def coded_accumulate_ref(grads: jax.Array, weights: jax.Array) -> jax.Array:
+    """Sum_i w_i * g_i over stacked task gradients.  grads [k, P], w [k]."""
+    return jnp.einsum("k,kp->p", weights.astype(jnp.float32),
+                      grads.astype(jnp.float32))
+
+
+def onestep_decode_ref(G: jax.Array, mask: jax.Array, rho: float) -> jax.Array:
+    """Algorithm 1: v = rho * A @ 1_r = rho * G @ mask.  G [k,n], mask [n]."""
+    return rho * (G.astype(jnp.float32) @ mask.astype(jnp.float32))
+
+
+def algorithmic_decode_ref(A: jax.Array, nu: float, iters: int) -> jax.Array:
+    """Lemma 12 iterates: u_{t} = (I - A A^T / nu)^t 1_k.  Returns u_iters."""
+    k = A.shape[0]
+    u = jnp.ones((k,), jnp.float32)
+    A = A.astype(jnp.float32)
+    for _ in range(iters):
+        u = u - A @ (A.T @ u) / nu
+    return u

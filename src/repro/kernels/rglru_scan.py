@@ -1,0 +1,98 @@
+"""RG-LRU diagonal linear recurrence Pallas kernel.
+
+    h_t = exp(log_a_t) * h_{t-1} + u_t        (per channel)
+
+TPU adaptation: the recurrence is diagonal, so channels are embarrassingly
+parallel — the grid tiles (batch, channel/128) as "parallel" dims and
+walks the sequence in chunks as the sequential ("arbitrary") dim, carrying
+h in a VMEM scratch tile between chunk programs.  Inside a chunk the scan
+runs on the VPU over a [chunk, 128] register tile; HBM traffic is exactly
+one read of (u, log_a) and one write of h — the memory-optimal schedule
+for a bandwidth-bound op (arithmetic intensity ~ 3 FLOP / 12 bytes).
+
+The production train path uses the XLA associative scan (O(log T) depth);
+this kernel is the fused-decode / long-sequence form where the carry
+never leaves VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rglru_scan"]
+
+
+def _rglru_kernel(u_ref, la_ref, h0_ref, h_ref, carry_ref, *,
+                  chunk: int, seq_len: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        carry_ref[...] = h0_ref[0].astype(jnp.float32)    # [1, bd]
+
+    u = u_ref[0].astype(jnp.float32)        # [chunk, bd]
+    la = la_ref[0].astype(jnp.float32)      # [chunk, bd]
+    a = jnp.exp(la)
+
+    def step(t, carry):
+        h_prev, out = carry
+        h_t = a[t] * h_prev + u[t]
+        out = jax.lax.dynamic_update_index_in_dim(out, h_t, t, 0)
+        return h_t, out
+
+    h_last, out = jax.lax.fori_loop(
+        0, chunk, step,
+        (carry_ref[0], jnp.zeros((chunk, u.shape[1]), jnp.float32)))
+    carry_ref[0] = h_last
+    h_ref[0] = out.astype(h_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "bd", "interpret"))
+def rglru_scan(
+    u: jax.Array,                 # [B, S, D] gated input (fp32)
+    log_a: jax.Array,             # [B, S, D] log decay (<= 0)
+    h0: jax.Array | None = None,  # [B, D] carried state
+    *,
+    chunk: int = 128,
+    bd: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked linear recurrence.  Returns h [B, S, D] (fp32)."""
+    B, S, D = u.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+    chunk = min(chunk, S)
+    bd = min(bd, D)
+    ns = math.ceil(S / chunk)
+    nd = math.ceil(D / bd)
+    ps, pd = ns * chunk - S, nd * bd - D
+    uf = u.astype(jnp.float32)
+    laf = log_a.astype(jnp.float32)
+    if ps or pd:
+        uf = jnp.pad(uf, ((0, 0), (0, ps), (0, pd)))
+        laf = jnp.pad(laf, ((0, 0), (0, ps), (0, pd)))
+    h0f = jnp.pad(h0.astype(jnp.float32), ((0, 0), (0, pd)))[:, None]
+
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=chunk, seq_len=S),
+        grid=(B, nd, ns),
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, chunk, bd), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, 1, bd), lambda b, d, s: (b, 0, d)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bd), lambda b, d, s: (b, s, d)),
+        out_shape=jax.ShapeDtypeStruct((B, ns * chunk, nd * bd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(uf, laf, h0f)
+    return out[:, :S, :D]

@@ -1,0 +1,384 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks the device count on first
+# init).  This module is the ONLY place the 512-device placeholder world is
+# created; smoke tests and benchmarks see the real single CPU device.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) cell this lowers and
+compiles the real step function (train_step / prefill / decode_step)
+against ShapeDtypeStruct inputs — no allocation — on the production
+meshes:
+
+    single pod : (data=16, model=16)          = 256 chips
+    multi pod  : (pod=2, data=16, model=16)   = 512 chips
+
+and records, per cell:
+  * compile success + wall time (failures here are bugs in our sharding),
+  * compiled.memory_analysis()  -> bytes per device (proves it fits),
+  * compiled.cost_analysis()    -> HLO FLOPs / bytes for the roofline,
+  * collective bytes parsed from the post-SPMD HLO text,
+  * reduced-depth UNROLLED variants (1 and 2 pattern groups, single-pod)
+    whose per-layer slope extrapolates scan-hidden terms to full depth
+    (XLA counts a `while` body once — DESIGN.md Sec. 6).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minicpm-2b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # 40 cells x 2 meshes
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.dist.sharding import logical_to_pspec, param_shardings, \
+    rules_for, use_mesh, use_rules
+from repro.launch import perf as PERF
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.models import SHAPES, build_model
+from repro.optim import OptConfig, adamw_update, init_opt_state, \
+    opt_state_shardings
+
+DEFAULT_OUT = Path("artifacts/dryrun")
+
+_is_axes = lambda t: isinstance(t, tuple) and all(
+    isinstance(e, (str, type(None))) for e in t)
+
+
+# ------------------------- sharding helpers ---------------------------------
+
+def _batch_axes(mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _input_shardings(mesh, specs: Dict[str, Any], model) -> Dict[str, Any]:
+    """NamedShardings for the input_specs() tree of a cell."""
+    ba = _batch_axes(mesh)
+    bsz_div = all(
+        s.shape[0] % RL_prod(mesh, ba) == 0
+        for k, s in specs.items()
+        if k != "caches" and hasattr(s, "shape") and s.ndim >= 1)
+    lead = ba if bsz_div else None
+
+    out: Dict[str, Any] = {}
+    for name, s in specs.items():
+        if name == "caches":
+            axes_tree = model.cache_axes()
+            out[name] = jax.tree_util.tree_map(
+                lambda axes, aval: NamedSharding(
+                    mesh, logical_to_pspec(axes, aval.shape, mesh)),
+                axes_tree, s, is_leaf=_is_axes)
+        else:
+            spec = [lead] + [None] * (s.ndim - 1) if s.ndim >= 1 else []
+            out[name] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def RL_prod(mesh, names) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for nm in names:
+        n *= sizes[nm]
+    return n
+
+
+# ------------------------- step builders ------------------------------------
+
+def build_cell(model, cell, mesh, *, with_opt: bool = True,
+               microbatches: int = 1):
+    """Returns (fn, args, in_shardings, out_shardings) ready to jit/lower.
+
+    microbatches > 1: gradient accumulation over a python-unrolled loop
+    (NOT lax.scan — the roofline accounting must see every microstep)."""
+    specs = model.input_specs(cell)
+    aparams = model.abstract_params()
+    p_sh = param_shardings(model.param_axes(), aparams, mesh,
+                           fsdp=getattr(model.cfg, "fsdp_params", False))
+
+    if cell.kind == "train":
+        opt_cfg = OptConfig()
+        aopt = jax.eval_shape(init_opt_state, aparams)
+        o_sh = opt_state_shardings(model.param_axes(), aparams, mesh)
+        b_sh = _input_shardings(mesh, specs, model)
+
+        if with_opt:
+            def train_step(params, opt_state, batch):
+                if microbatches == 1:
+                    (loss, metrics), grads = jax.value_and_grad(
+                        model.loss_fn, has_aux=True)(params, batch)
+                    mean_ce = metrics["mean_ce"]
+                else:
+                    def sl(v, i):
+                        if hasattr(v, "ndim") and v.ndim >= 1:
+                            mb = v.shape[0] // microbatches
+                            return v[i * mb: (i + 1) * mb]
+                        return v
+                    loss = jnp.zeros((), jnp.float32)
+                    mean_ce = jnp.zeros((), jnp.float32)
+                    grads = None
+                    for i in range(microbatches):
+                        micro = {k: sl(v, i) for k, v in batch.items()}
+                        (li, mi), gi = jax.value_and_grad(
+                            model.loss_fn, has_aux=True)(params, micro)
+                        gi = jax.tree_util.tree_map(
+                            lambda g: g.astype(jnp.float32), gi)
+                        grads = gi if grads is None else \
+                            jax.tree_util.tree_map(jnp.add, grads, gi)
+                        loss = loss + li
+                        mean_ce = mean_ce + mi["mean_ce"] / microbatches
+                lr = jnp.asarray(1e-4, jnp.float32)
+                params, opt_state, om = adamw_update(
+                    params, grads, opt_state, opt_cfg, lr)
+                return params, opt_state, (loss, mean_ce, om["grad_norm"])
+
+            return (train_step, (aparams, aopt, specs),
+                    (p_sh, o_sh, b_sh), (p_sh, o_sh, None))
+
+        def grad_step(params, batch):
+            (loss, _), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(params, batch)
+            return loss, grads
+
+        return grad_step, (aparams, specs), (p_sh, b_sh), None
+
+    if cell.kind == "prefill":
+        b_sh = _input_shardings(mesh, specs, model)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, cache_len=cell.seq_len)
+
+        return prefill_step, (aparams, specs), (p_sh, b_sh), None
+
+    # decode: one new token against a cache of seq_len
+    b_sh = _input_shardings(mesh, specs, model)
+
+    def decode_step(params, tokens, caches):
+        return model.decode_step(params, tokens, caches)
+
+    return (decode_step, (aparams, specs["tokens"], specs["caches"]),
+            (p_sh, b_sh["tokens"], b_sh["caches"]), None)
+
+
+# ------------------------- per-cell dry run ---------------------------------
+
+def _memory_analysis(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover - backend-specific
+        return {"error": repr(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def _cost_analysis(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float))}
+
+
+def lower_compile_cell(arch: str, shape: str, multi_pod: bool,
+                       *, hlo_dir: Optional[Path] = None,
+                       opt: bool = False) -> Dict[str, Any]:
+    """Lower + compile one cell; return the dry-run record."""
+    cfg = get_config(arch)
+    if opt:
+        cfg = PERF.optimize(cfg)
+    model = build_model(cfg)
+    cell = SHAPES[shape]
+    micro = PERF.microbatches_for(arch, shape, opt)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape,
+        "mesh": "pod2_data16_model16" if multi_pod else "data16_model16",
+        "kind": cell.kind,
+        "opt": opt,
+        "microbatches": micro,
+        "params": model.param_count(),
+        "active_params": RL.active_param_count(model),
+    }
+
+    ok, reason = model.supports_cell(cell)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with use_mesh(mesh), use_rules(rules_for(cfg)):
+        fn, args, in_sh, out_sh = build_cell(model, cell, mesh,
+                                             microbatches=micro)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    rec["memory_analysis"] = _memory_analysis(compiled)
+    rec["cost_analysis"] = _cost_analysis(compiled)
+    hlo = compiled.as_text()
+    coll = RL.parse_collectives(hlo)
+    rec["collectives"] = {
+        "bytes_by_kind": coll.bytes_by_kind,
+        "count_by_kind": coll.count_by_kind,
+        "in_loop_bytes": coll.in_loop_bytes,
+        "total_bytes": coll.total_bytes,
+    }
+    rec["status"] = "ok"
+    if hlo_dir is not None:
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+        (hlo_dir / f"{arch}__{shape}__{rec['mesh']}.hlo.txt").write_text(hlo)
+    return rec
+
+
+# -------------------- reduced-depth roofline variants ------------------------
+
+def _reduced_cfg(cfg, groups: int):
+    """Full-width, UNROLLED, `groups` pattern groups deep (no layer scan,
+    no remat — HLO terms become per-layer-exact for extrapolation)."""
+    p = len(cfg.block_pattern)
+    kw: Dict[str, Any] = dict(
+        name=f"{cfg.name}-g{groups}", n_layers=groups * p,
+        scan_layers=False, remat="none")
+    if cfg.encoder_layers:
+        ratio = cfg.encoder_layers / cfg.n_layers
+        kw["encoder_layers"] = max(int(round(groups * p * ratio)), 1)
+    return dataclasses.replace(cfg, **kw)
+
+
+def roofline_variant(arch: str, shape: str, groups: int,
+                     opt: bool = False) -> Dict[str, Any]:
+    """cost/collective terms of a reduced-depth unrolled variant
+    (single-pod mesh)."""
+    cfg = get_config(arch)
+    if opt:
+        cfg = PERF.optimize(cfg)
+    cfg = _reduced_cfg(cfg, groups)
+    model = build_model(cfg)
+    cell = SHAPES[shape]
+    micro = PERF.microbatches_for(arch, shape, opt)
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    with use_mesh(mesh), use_rules(rules_for(cfg)):
+        fn, args, in_sh, out_sh = build_cell(model, cell, mesh,
+                                             microbatches=micro)
+        compiled = jax.jit(fn, in_shardings=in_sh,
+                           out_shardings=out_sh).lower(*args).compile()
+    coll = RL.parse_collectives(compiled.as_text())
+    return {
+        "groups": groups,
+        "n_layers": cfg.n_layers,
+        "encoder_layers": cfg.encoder_layers,
+        "cost_analysis": _cost_analysis(compiled),
+        "collective_bytes": coll.total_bytes,
+        "collective_in_loop_bytes": coll.in_loop_bytes,
+        "compile_s": round(time.time() - t0, 2),
+    }
+
+
+# ------------------------- driver -------------------------------------------
+
+def run_cell(arch: str, shape: str, meshes, out_dir: Path,
+             *, variants: bool, skip_existing: bool,
+             hlo_dir: Optional[Path] = None, opt: bool = False) -> None:
+    for mesh_name in meshes:
+        multi = mesh_name == "multi"
+        tag = "pod2_data16_model16" if multi else "data16_model16"
+        suffix = "__opt" if opt else ""
+        out = out_dir / f"{arch}__{shape}__{tag}{suffix}.json"
+        if skip_existing and out.exists():
+            prev = json.loads(out.read_text())
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[skip-existing] {out.name}")
+                continue
+        print(f"[dryrun] {arch} x {shape} x {tag}{suffix} ...", flush=True)
+        try:
+            rec = lower_compile_cell(arch, shape, multi, hlo_dir=hlo_dir,
+                                     opt=opt)
+        except Exception:
+            rec = {"arch": arch, "shape": shape, "mesh": tag, "opt": opt,
+                   "status": "error", "traceback": traceback.format_exc()}
+        # reduced-depth variants: single-pod only, successful cells only
+        if variants and not multi and rec.get("status") == "ok":
+            rec["variants"] = []
+            for g in (1, 2):
+                try:
+                    rec["variants"].append(
+                        roofline_variant(arch, shape, g, opt=opt))
+                except Exception:
+                    rec["variants"].append(
+                        {"groups": g, "status": "error",
+                         "traceback": traceback.format_exc()})
+        out_dir.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(rec, indent=1))
+        status = rec.get("status")
+        extra = (f" compile={rec.get('compile_s')}s" if status == "ok"
+                 else f" ({rec.get('reason', '')[:60]})" if status == "skipped"
+                 else "")
+        print(f"[dryrun] {arch} x {shape} x {tag}: {status}{extra}",
+              flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None],
+                    help="input-shape cell (default: all)")
+    ap.add_argument("--mesh", default="single,multi",
+                    help="comma list from {single,multi}")
+    ap.add_argument("--all", action="store_true", help="all 40 cells x meshes")
+    ap.add_argument("--out-dir", default=str(DEFAULT_OUT))
+    ap.add_argument("--hlo-dir", default=None,
+                    help="also dump compiled HLO text here")
+    ap.add_argument("--no-variants", action="store_true",
+                    help="skip reduced-depth roofline variants")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the Sec-Perf optimized configs "
+                         "(repro.launch.perf) and write *__opt.json")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [m.strip() for m in args.mesh.split(",") if m.strip()]
+    out_dir = Path(args.out_dir)
+    hlo_dir = Path(args.hlo_dir) if args.hlo_dir else None
+
+    for arch in archs:
+        for shape in shapes:
+            run_cell(arch, shape, meshes, out_dir,
+                     variants=not args.no_variants,
+                     skip_existing=args.skip_existing, hlo_dir=hlo_dir,
+                     opt=args.opt)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,195 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_per_device / peak_flops
+    memory     = HLO_bytes_per_device / hbm_bw
+    collective = collective_bytes_per_device / link_bw
+
+`compiled.cost_analysis()` / `lowered/compiled.as_text()` describe the
+per-device SPMD module, so no extra division by chip count is needed.
+
+Two structural corrections documented in DESIGN.md Sec. 6:
+ * XLA counts a scan (`while`) body ONCE -> we lower small *unrolled*
+   depth variants (L = p and 2p pattern groups) and extrapolate the
+   per-layer slope to the full depth;
+ * collective bytes are not in cost_analysis -> we parse the
+   post-partitioning HLO text and sum operand bytes of all-gather /
+   all-reduce / reduce-scatter / all-to-all / collective-permute ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+# TPU v5e
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'f32[4,128]{1,0}' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+    in_loop_bytes: int           # bytes on ops inside while-bodies (flagged:
+                                 # these are counted once; extrapolation
+                                 # handles depth, inner loops are the caveat)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in an HLO module.
+
+    For all-reduce the output size equals the contribution per device; for
+    all-gather it is the gathered size — both are the right per-device
+    wire-byte proxies for a ring implementation within a constant factor.
+    """
+    bytes_by_kind: Dict[str, int] = {}
+    count_by_kind: Dict[str, int] = {}
+    in_loop = 0
+
+    # identify computations used as while bodies/conditions
+    loop_comps = set(re.findall(r"(?:body|condition)=%?([\w.\-]+)", hlo_text))
+
+    current_comp = None
+    for line in hlo_text.splitlines():
+        header = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->", line)
+        if header and line.rstrip().endswith("{"):
+            current_comp = header.group(1)
+        stripped = line.strip()
+        for kind in _COLLECTIVES:
+            # ops look like: %ar = f32[...] all-reduce(...), replica_groups=...
+            if re.search(rf"=\s*[\w\[\],{{}}\s]*\b{kind}(?:-start|-done)?\(",
+                         stripped):
+                if kind + "-done" in stripped:
+                    continue  # avoid double counting start/done pairs
+                lhs = stripped.split("=", 1)[1]
+                b = _shape_bytes(lhs.split(f"{kind}", 1)[0])
+                bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + b
+                count_by_kind[kind] = count_by_kind.get(kind, 0) + 1
+                if current_comp in loop_comps:
+                    in_loop += b
+                break
+    return CollectiveStats(bytes_by_kind, count_by_kind, in_loop)
+
+
+def cost_terms(cost: dict) -> Tuple[float, float]:
+    """(flops, bytes_accessed) from compiled.cost_analysis()."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    if bytes_accessed == 0.0:
+        bytes_accessed = sum(v for k, v in cost.items()
+                             if k.startswith("bytes accessed"))
+    return flops, bytes_accessed
+
+
+def linear_extrapolate(v_small: float, v_big: float, layers_small: int,
+                       layers_big: int, layers_full: int) -> float:
+    """v(L) = base + slope*L fitted on two depths, evaluated at full depth."""
+    slope = (v_big - v_small) / max(layers_big - layers_small, 1)
+    base = v_small - slope * layers_small
+    return base + slope * layers_full
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float) -> dict:
+    compute = flops / PEAK_FLOPS
+    memory = bytes_accessed / HBM_BW
+    collective = collective_bytes / LINK_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms.update({
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": bound,
+        "roofline_fraction": compute / bound if bound > 0 else 0.0,
+    })
+    return terms
+
+
+def _encdec_param_split(cfg) -> Tuple[float, float]:
+    """(N_enc, N_dec): params touched per encoder token vs decoder token.
+
+    Cross-attention K/V projections process encoder tokens (once per
+    sequence); everything else in the decoder processes decoder tokens.
+    """
+    d = cfg.d_model
+    per_attn = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+    n_up = 2 if cfg.act in ("swiglu", "geglu") else 1
+    per_mlp = (n_up + 1) * d * cfg.d_ff
+    cross_kv = 2 * d * cfg.kv_dim
+    cross_q_out = d * cfg.q_dim + cfg.q_dim * d
+    n_enc = cfg.encoder_layers * (per_attn + per_mlp + 2 * d) \
+        + cfg.n_layers * cross_kv
+    n_dec = cfg.padded_vocab * d * (1 if cfg.tie_embeddings else 2) \
+        + cfg.n_layers * (per_attn + per_mlp + cross_q_out + 3 * d)
+    return float(n_enc), float(n_dec)
+
+
+def analytic_model_flops(cfg, cell, n_active_params: int) -> float:
+    """MODEL_FLOPS: 6*N*D train, 2*N*D prefill, 2*N*B decode (per step,
+    whole job; divide by chips for per-device).  Encoder-decoder models
+    split N by the tokens each side actually processes (decoder length =
+    seq_len / 8 per the audio-stub convention)."""
+    B, S = cell.global_batch, cell.seq_len
+    mult = 6.0 if cell.kind == "train" else 2.0
+    if getattr(cfg, "encoder_layers", 0):
+        n_enc, n_dec = _encdec_param_split(cfg)
+        s_dec = max(S // 8, 16)
+        if cell.kind == "decode":
+            return 2.0 * n_dec * B
+        return mult * B * (n_enc * S + n_dec * s_dec)
+    if cell.kind == "decode":
+        return 2.0 * n_active_params * B
+    return mult * n_active_params * B * S
+
+
+def active_param_count(model) -> int:
+    """Active (per-token) parameters: MoE counts top_k + shared experts."""
+    cfg = model.cfg
+    n = model.param_count()
+    if cfg.moe is not None:
+        m = cfg.moe
+        total_e = m.e_padded  # storage may be padded for EP divisibility
+        act_e = m.top_k
+        # expert params per layer
+        n_up = 2 if cfg.act in ("swiglu", "geglu") else 1
+        per_expert = (n_up + 1) * cfg.d_model * m.d_ff_expert
+        counts = cfg._block_counts()
+        moe_layers = counts.get("attn", 0)
+        n -= (total_e - act_e) * per_expert * moe_layers
+    return n

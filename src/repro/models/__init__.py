@@ -1,0 +1,4 @@
+"""Pure-JAX model stack for the assigned architecture pool."""
+
+from .config import ArchConfig, MoEConfig, reduce_for_smoke  # noqa: F401
+from .model import SHAPES, Model, ShapeCell, build_model  # noqa: F401

@@ -1,0 +1,222 @@
+"""Architecture configuration.
+
+One dataclass covers the whole assigned pool: dense / MoE / hybrid
+(RG-LRU + local attention) / SSM (RWKV6) / encoder-decoder (Whisper) /
+VLM-backbone.  Exact dimension sets live in repro/configs/<arch>.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["MoEConfig", "ArchConfig", "reduce_for_smoke"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0          # always-on shared experts (fine-grained MoE)
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # 'ep'  : shard experts across the model axis (E % axis == 0)
+    # 'tp'  : shard each expert's d_ff across the model axis
+    expert_shard: str = "ep"
+    # 'global'  : capacity dispatch over the whole (sharded) batch — one
+    #             global sort; GSPMD materializes replicated [E, C, d]
+    #             buffers (the paper-faithful naive port; baseline).
+    # 'grouped' : per-sequence dispatch (vmapped over batch) — sort,
+    #             gather and scatter stay local to the data shard; the
+    #             Sec-Perf optimization (EXPERIMENTS.md).
+    dispatch: str = "global"
+    # Pad expert STORAGE to this count with zero-routed dummy experts so
+    # the expert dim divides the 'model' axis (granite: 40 -> 48 on a
+    # 16-way axis => clean EP; Sec-Perf iteration 2).  0 = no padding.
+    pad_experts_to: int = 0
+
+    @property
+    def e_padded(self) -> int:
+        return max(self.pad_experts_to, self.num_experts)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0              # 0 -> d_model // n_heads
+
+    # --- attention details ---
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    local_window: int = 0        # 0 = global; >0 = sliding-window attention
+    logit_softcap: float = 0.0
+
+    # --- block composition ---
+    # repeating pattern of block kinds; "attn" | "rec" (RG-LRU) | "rwkv"
+    block_pattern: Tuple[str, ...] = ("attn",)
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    act: str = "swiglu"          # swiglu | geglu | gelu
+    tie_embeddings: bool = False
+
+    # --- family extras ---
+    moe: Optional[MoEConfig] = None
+    encoder_layers: int = 0      # >0 -> encoder-decoder
+    frontend: str = "embed"      # embed | frames (audio stub) | patches (vlm stub)
+    frontend_tokens: int = 0     # prefix length fed by the stub frontend
+    rnn_width: int = 0           # RG-LRU recurrence width (0 -> d_model)
+    conv_width: int = 4          # temporal conv kernel in recurrent blocks
+
+    # --- distribution overrides (see dist.sharding.rules_for) ---
+    batch_shard_model: bool = False  # attn-free: 'model' axis as extra DP
+    fsdp_params: bool = False        # shard a replicated param dim on 'data'
+
+    # --- numerics / runtime ---
+    param_dtype: str = "float32"
+    norm_io: str = "f32"         # f32 | bf16: dtype of norm outputs (fp32
+                                 # reduction internals either way)
+    loss_chunk: int = 0          # >0: head+CE in seq chunks (no full
+                                 # [B,S,V] fp32 materialization)
+    compute_dtype: str = "bfloat16"
+    remat: str = "dots"          # none | dots | full
+    scan_layers: bool = True
+    attn_impl: str = "xla_chunked"   # xla_chunked | xla_naive | pallas | pallas_interpret
+    seq_impl: str = "auto"           # recurrence impl: auto | scan | chunked
+    vocab_pad_to: int = 256
+
+    # --- optimizer schedule hint (minicpm uses WSD) ---
+    schedule: str = "cosine"
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // max(self.n_heads, 1))
+        if self.n_heads and self.n_kv and self.n_heads % self.n_kv:
+            raise ValueError(f"{self.name}: n_heads {self.n_heads} % n_kv {self.n_kv}")
+        if self.family in ("encdec",) and self.encoder_layers <= 0:
+            raise ValueError("encdec family needs encoder_layers > 0")
+
+    # ----- derived sizes -----
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab, self.vocab_pad_to)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv * self.d_head
+
+    @property
+    def d_rnn(self) -> int:
+        return self.rnn_width or self.d_model
+
+    @property
+    def pattern_counts(self) -> Tuple[int, int]:
+        """(n_full_pattern_groups, n_remainder_layers)."""
+        p = len(self.block_pattern)
+        return self.n_layers // p, self.n_layers % p
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, dff, V = self.d_model, self.d_ff, self.padded_vocab
+        emb = V * d
+        head = 0 if self.tie_embeddings else V * d
+        per_attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.qkv_bias:
+            per_attn += self.q_dim + 2 * self.kv_dim
+        n_up = 2 if self.act in ("swiglu", "geglu") else 1
+        per_mlp = (n_up + 1) * d * dff
+        per_moe = 0
+        if self.moe is not None:
+            m = self.moe
+            per_moe = (m.num_experts + m.num_shared) * (n_up + 1) * d * m.d_ff_expert \
+                + d * m.num_experts
+        per_rec = 0
+        if "rec" in self.block_pattern:
+            dr = self.d_rnn
+            per_rec = 2 * d * dr + dr * d + self.conv_width * dr + 2 * dr * (dr // 8) + dr
+        total_blocks = 0
+        counts = self._block_counts()
+        for kind, cnt in counts.items():
+            if kind == "attn":
+                total_blocks += cnt * (per_attn + (per_moe if self.moe else per_mlp) + 2 * d)
+            elif kind == "rec":
+                total_blocks += cnt * (per_rec + per_mlp + 2 * d)
+            elif kind == "rwkv":
+                # time-mix (5 proj + decay lora) + channel-mix
+                tm = 4 * d * d + d * d + 2 * d * 64
+                cm = 2 * d * self.d_ff
+                total_blocks += cnt * (tm + cm + 2 * d)
+        if self.encoder_layers:
+            enc = self.encoder_layers * (per_attn + per_mlp + 2 * d)
+            dec_cross = self.n_layers * (per_attn + d)  # cross-attn blocks
+            total_blocks += enc + dec_cross
+        return emb + head + total_blocks + d  # final norm
+
+    def _block_counts(self) -> dict:
+        groups, rem = self.pattern_counts
+        counts: dict = {}
+        for kind in self.block_pattern:
+            counts[kind] = counts.get(kind, 0) + groups
+        for kind in self.block_pattern[:rem]:
+            counts[kind] = counts.get(kind, 0) + 1
+        return counts
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True iff decode cost is sub-quadratic in context (SSM / hybrid
+        with bounded window) — gates the long_500k shape per the brief."""
+        kinds = set(self.block_pattern)
+        if "rwkv" in kinds and "attn" not in kinds:
+            return True
+        if "rec" in kinds:
+            return self.local_window > 0  # bounded KV per attn layer
+        return False
+
+
+def reduce_for_smoke(cfg: ArchConfig) -> ArchConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    pat = len(cfg.block_pattern)
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(
+            cfg.moe, num_experts=min(cfg.moe.num_experts, 4),
+            top_k=min(cfg.moe.top_k, 2), d_ff_expert=32,
+            num_shared=min(cfg.moe.num_shared, 1),
+            # no capacity drops at smoke scale, so cached decode is exactly
+            # parity with the full forward (drops are batch-dependent)
+            capacity_factor=8.0)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=max(2 * pat, pat),         # at least 2 pattern groups
+        d_model=64,
+        n_heads=4,
+        n_kv=min(cfg.n_kv, 2) if cfg.n_kv < cfg.n_heads else 4,
+        d_head=16,
+        d_ff=128,
+        vocab=503,                           # deliberately non-multiple of 256
+        moe=moe,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        frontend_tokens=8 if cfg.frontend != "embed" else 0,
+        local_window=min(cfg.local_window, 16) if cfg.local_window else 0,
+        rnn_width=64 if cfg.rnn_width else 0,
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat="none",
+        scan_layers=cfg.scan_layers,
+        vocab_pad_to=64,
+    )

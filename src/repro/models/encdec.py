@@ -1,0 +1,227 @@
+"""Encoder-decoder backbone (Whisper-large-v3 style).
+
+The audio frontend is a STUB per the brief: input_specs provide
+precomputed frame embeddings [B, T_enc, d_model] (standing in for the
+mel + conv1d stem).  Encoder = bidirectional attention blocks; decoder =
+causal self-attention + cross-attention + MLP per layer.  Sinusoidal
+absolute positions (whisper uses no RoPE).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist import constrain
+from .config import ArchConfig
+from .layers import attention, cross_entropy, mlp, norm
+from .spec import ParamSpec
+from . import blocks as B
+
+__all__ = ["encdec_specs", "encdec_loss", "encdec_prefill",
+           "encdec_decode_step", "init_encdec_cache", "encdec_cache_axes"]
+
+
+def _maybe_scan(body, x, xs, cfg: ArchConfig):
+    """lax.scan over stacked layers, or a python unroll when
+    cfg.scan_layers is False (the dry-run's reduced-depth roofline
+    variants need per-layer-visible HLO: a while body is costed once)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, xs)
+    leaves = jax.tree_util.tree_leaves(xs)
+    L = leaves[0].shape[0]
+    ys = []
+    for i in range(L):
+        sl = jax.tree_util.tree_map(lambda t: t[i], xs)
+        x, y = body(x, sl)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return x, None
+    return x, jax.tree_util.tree_map(lambda *ts: jnp.stack(ts), *ys)
+
+
+def _sinusoid(S: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def encdec_specs(cfg: ArchConfig) -> dict:
+    d, vp = cfg.d_model, cfg.padded_vocab
+    Le, Ld = cfg.encoder_layers, cfg.n_layers
+    enc_block = B.attn_block_specs(cfg, prefix_shape=(Le,))
+    dec_block = {
+        "self": B.attn_block_specs(cfg, prefix_shape=(Ld,)),
+        "cross": B.cross_block_specs(cfg, prefix_shape=(Ld,)),
+    }
+    return {
+        "embed": ParamSpec((vp, d), ("vocab", None), init="embed", scale=0.02),
+        "enc_stack": enc_block,
+        "enc_norm": B.norm_specs(cfg),
+        "dec_stack": dec_block,
+        "final_norm": B.norm_specs(cfg),
+        "head": ParamSpec((d, vp), (None, "vocab")),
+    }
+
+
+def _cast(params, cfg):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(cdt) if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+        params)
+
+
+def _encode(params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames [B, T, d] (stub embeddings) -> encoder output [B, T, d]."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + _sinusoid(x.shape[1], cfg.d_model, x.dtype)[None]
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, p_slice):
+        y, _, _ = B.attn_block_apply(p_slice, x, cfg, positions=positions,
+                                     causal=False, window=0, cache=None)
+        return y, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = _maybe_scan(body, x, params["enc_stack"], cfg)
+    return norm(x, params["enc_norm"], cfg.norm, io=cfg.norm_io)
+
+
+def _decode_tokens(params, cfg: ArchConfig, tokens, positions, cross_caches,
+                   self_caches=None):
+    """Decoder trunk.  cross_caches: stacked [Ld, ...] K/V from the encoder."""
+    emb = params["embed"]
+    x = emb[tokens]
+    x = x + _sinusoid_at(positions, cfg.d_model, x.dtype)[None]
+    x = constrain(x, "batch", "seq" if x.shape[1] > 1 else None, "embed")
+    decode = self_caches is not None
+
+    if decode:
+        def body(x, slices):
+            p_slice, cross_c, self_c = slices
+            y, new_c, _ = B.attn_block_apply(
+                p_slice["self"], x, cfg, positions=positions, causal=True,
+                cache=self_c)
+            y = B.cross_block_apply(p_slice["cross"], y, cross_c, cfg)
+            return y, new_c
+
+        x, new_self = _maybe_scan(
+            body, x, (params["dec_stack"], cross_caches, self_caches), cfg)
+    else:
+        def body(x, slices):
+            p_slice, cross_c = slices
+            y, _, _ = B.attn_block_apply(
+                p_slice["self"], x, cfg, positions=positions, causal=True,
+                cache=None)
+            y = B.cross_block_apply(p_slice["cross"], y, cross_c, cfg)
+            return y, None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        x, _ = _maybe_scan(body, x, (params["dec_stack"], cross_caches), cfg)
+        new_self = None
+    x = norm(x, params["final_norm"], cfg.norm, io=cfg.norm_io)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))
+    return constrain(logits, "batch", None, "vocab"), new_self
+
+
+def _sinusoid_at(positions, d, dtype):
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = positions[:, None].astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _make_cross_caches(params, cfg, enc_out):
+    """Project encoder output into stacked per-layer cross K/V."""
+    def per_layer(cross_p):
+        return B.make_cross_cache(cross_p, enc_out, cfg)
+    return jax.vmap(per_layer, in_axes=0)(params["dec_stack"]["cross"])
+
+
+def encdec_loss(params, cfg: ArchConfig, batch: dict) -> Tuple[jax.Array, dict]:
+    """batch: frames [B,T,d], tokens [B,Sd], labels [B,Sd], loss_weight [B]."""
+    params = _cast(params, cfg)
+    enc_out = _encode(params, cfg, batch["frames"])
+    cross = _make_cross_caches(params, cfg, enc_out)
+    positions = jnp.arange(batch["tokens"].shape[1])
+    logits, _ = _decode_tokens(params, cfg, batch["tokens"], positions, cross)
+    ce = cross_entropy(logits, batch["labels"], cfg.vocab)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(ce)
+    row = (ce * mask).sum(-1) / jnp.maximum(mask.sum(-1), 1.0)
+    wloss = (row * batch["loss_weight"].astype(jnp.float32)).sum()
+    return wloss, {"loss": wloss, "mean_ce": row.mean(),
+                   "aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, enc_len: int,
+                      self_len: int, dtype=jnp.bfloat16) -> dict:
+    Ld = cfg.n_layers
+    stack = lambda c: jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (Ld,) + x.shape), c)
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "cross": stack(B.init_cross_cache(cfg, batch, enc_len, dtype)),
+        "self": stack(B.init_attn_cache(cfg, batch, self_len, dtype)),
+    }
+
+
+def encdec_cache_axes(cfg: ArchConfig) -> dict:
+    kv = ("layers", "batch", "seq_shard", "act_kv", None)
+    return {
+        "pos": (),
+        "cross": {"k": kv, "v": kv},
+        "self": {"k": kv, "v": kv, "kpos": ("layers", None)},
+    }
+
+
+def encdec_prefill(params, cfg: ArchConfig, batch: dict, self_len: int
+                   ) -> Tuple[jax.Array, dict]:
+    """Encode frames + process the decoder prompt; returns (logits, caches)."""
+    params = _cast(params, cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    enc_out = _encode(params, cfg, batch["frames"])
+    cross = _make_cross_caches(params, cfg, enc_out)
+    Bsz, Sd = batch["tokens"].shape
+    positions = jnp.arange(Sd)
+    self_caches = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape),
+        B.init_attn_cache(cfg, Bsz, self_len, cdt))
+
+    def body(x, slices):
+        p_slice, cross_c, self_c = slices
+        y, new_c, _ = B.attn_block_apply(
+            p_slice["self"], x, cfg, positions=positions, causal=True,
+            cache=self_c)
+        y = B.cross_block_apply(p_slice["cross"], y, cross_c, cfg)
+        return y, new_c
+
+    emb = params["embed"]
+    x = emb[batch["tokens"]] + _sinusoid(Sd, cfg.d_model, cdt)[None]
+    x, new_self = _maybe_scan(body, x,
+                              (params["dec_stack"], cross, self_caches), cfg)
+    x = norm(x, params["final_norm"], cfg.norm, io=cfg.norm_io)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["head"].astype(x.dtype))
+    caches = {"pos": jnp.asarray(Sd, jnp.int32), "cross": cross,
+              "self": new_self}
+    return logits, caches
+
+
+def encdec_decode_step(params, cfg: ArchConfig, tokens: jax.Array,
+                       caches: dict) -> Tuple[jax.Array, dict]:
+    params = _cast(params, cfg)
+    pos = caches["pos"]
+    positions = pos[None] + jnp.arange(1)
+    logits, new_self = _decode_tokens(params, cfg, tokens, positions,
+                                      caches["cross"], caches["self"])
+    return logits[:, 0], {"pos": pos + 1, "cross": caches["cross"],
+                          "self": new_self}

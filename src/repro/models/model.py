@@ -1,0 +1,176 @@
+"""Model facade: one object per architecture exposing init / loss /
+prefill / decode_step / input_specs, family-dispatched.
+
+This is the single surface the training loop, serving runtime, dry-run
+and benchmarks consume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from . import encdec as ED
+from . import lm as LM
+from . import spec as SP
+
+__all__ = ["ShapeCell", "SHAPES", "Model", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (input-shape) cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    specs: dict
+
+    # ---------------- params ----------------
+    def init(self, rng: jax.Array):
+        return SP.init_params(self.specs, rng)
+
+    def abstract_params(self):
+        return SP.abstract_params(self.specs)
+
+    def param_axes(self):
+        return SP.axes_tree(self.specs)
+
+    def param_count(self) -> int:
+        return SP.param_count(self.specs)
+
+    # ---------------- training ----------------
+    def loss_fn(self, params, batch) -> Tuple[jax.Array, dict]:
+        if self.cfg.family == "encdec":
+            return ED.encdec_loss(params, self.cfg, batch)
+        return LM.lm_loss(params, self.cfg, batch)
+
+    # ---------------- serving ----------------
+    def prefill(self, params, batch, cache_len: int):
+        if self.cfg.family == "encdec":
+            return ED.encdec_prefill(params, self.cfg, batch,
+                                     self_len=cache_len)
+        return LM.lm_prefill(params, self.cfg, batch, cache_len)
+
+    def decode_step(self, params, tokens, caches):
+        if self.cfg.family == "encdec":
+            return ED.encdec_decode_step(params, self.cfg, tokens, caches)
+        return LM.lm_decode_step(params, self.cfg, tokens, caches)
+
+    def init_cache(self, batch: int, length: int, dtype=jnp.bfloat16):
+        if self.cfg.family == "encdec":
+            return ED.init_encdec_cache(self.cfg, batch, enc_len=length,
+                                        self_len=max(length // 8, 16),
+                                        dtype=dtype)
+        return LM.init_lm_cache(self.cfg, batch, length, dtype)
+
+    def cache_axes(self):
+        if self.cfg.family == "encdec":
+            return ED.encdec_cache_axes(self.cfg)
+        return LM.lm_cache_axes(self.cfg)
+
+    def abstract_cache(self, batch: int, length: int, dtype=jnp.bfloat16):
+        """ShapeDtypeStruct cache tree — no allocation (dry-run path)."""
+        return jax.eval_shape(
+            functools.partial(self.init_cache, batch, length, dtype))
+
+    # ---------------- input specs ----------------
+    def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        cfg = self.cfg
+        B, S = cell.global_batch, cell.seq_len
+        cdt = jnp.dtype(cfg.compute_dtype)
+        i32 = jnp.int32
+        f32 = jnp.float32
+        sds = jax.ShapeDtypeStruct
+
+        if cell.kind == "train":
+            if cfg.family == "encdec":
+                Sd = max(S // 8, 16)
+                return {
+                    "frames": sds((B, S, cfg.d_model), cdt),
+                    "tokens": sds((B, Sd), i32),
+                    "labels": sds((B, Sd), i32),
+                    "loss_weight": sds((B,), f32),
+                }
+            if cfg.frontend == "patches":
+                P = cfg.frontend_tokens or 256
+                return {
+                    "patches": sds((B, P, cfg.d_model), cdt),
+                    "tokens": sds((B, S - P), i32),
+                    "labels": sds((B, S - P), i32),
+                    "loss_weight": sds((B,), f32),
+                }
+            return {
+                "tokens": sds((B, S), i32),
+                "labels": sds((B, S), i32),
+                "loss_weight": sds((B,), f32),
+            }
+
+        if cell.kind == "prefill":
+            if cfg.family == "encdec":
+                Sd = max(S // 8, 16)
+                return {"frames": sds((B, S, cfg.d_model), cdt),
+                        "tokens": sds((B, Sd), i32)}
+            if cfg.frontend == "patches":
+                P = cfg.frontend_tokens or 256
+                return {"patches": sds((B, P, cfg.d_model), cdt),
+                        "tokens": sds((B, S - P), i32)}
+            return {"tokens": sds((B, S), i32)}
+
+        # decode: one new token against a cache of seq_len
+        return {
+            "tokens": sds((B, 1), i32),
+            "caches": self.abstract_cache(B, S, cdt),
+        }
+
+    def supports_cell(self, cell: ShapeCell) -> Tuple[bool, str]:
+        """Gate per-arch inapplicable cells (documented in DESIGN.md)."""
+        if cell.name == "long_500k" and not self.cfg.supports_long_context:
+            return False, "full quadratic attention at 512k is infeasible; " \
+                          "skipped per brief (sub-quadratic archs only)"
+        return True, ""
+
+
+def _apply_param_dtype(specs, dtype_str: str):
+    """Override the storage dtype of matrix-shaped params (norm scales
+    and other vectors stay fp32 — their memory is negligible and fp32
+    keeps the reductions stable)."""
+    dt = jnp.dtype(dtype_str)
+    if dt == jnp.float32:
+        return specs
+
+    def one(s: SP.ParamSpec):
+        if len(s.shape) >= 2:
+            return dataclasses.replace(s, dtype=dt)
+        return s
+
+    return jax.tree_util.tree_map(
+        one, specs, is_leaf=lambda t: isinstance(t, SP.ParamSpec))
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "encdec":
+        specs = ED.encdec_specs(cfg)
+    else:
+        specs = LM.lm_specs(cfg)
+    specs = _apply_param_dtype(specs, cfg.param_dtype)
+    return Model(cfg=cfg, specs=specs)

@@ -1,0 +1,244 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity
+dispatch (gather -> grouped einsum -> scatter-add), plus a dense oracle
+used by tests.
+
+Sharding: experts across the 'model' axis when E divides it (dbrx, EP);
+otherwise each expert's d_ff is tensor-parallel (granite, E=40).  The
+dispatch is written with global gathers so GSPMD inserts the all-to-all.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist import constrain
+from .config import ArchConfig
+from .spec import ParamSpec
+
+__all__ = ["moe_specs", "moe_apply", "moe_apply_dense"]
+
+
+def _expert_axes(cfg: ArchConfig, prefix_len: int):
+    L = tuple("layers" for _ in range(prefix_len))
+    if cfg.moe.expert_shard == "ep":
+        return (L + ("experts", None, None), L + ("experts", None, None))
+    return (L + (None, None, "expert_mlp"), L + (None, "expert_mlp", None))
+
+
+def moe_specs(cfg: ArchConfig, prefix_shape=()) -> dict:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    Ep = m.e_padded  # storage padded for EP divisibility (router stays E)
+    up_axes, down_axes = _expert_axes(cfg, len(prefix_shape))
+    L = tuple("layers" for _ in prefix_shape)
+    gated = cfg.act in ("swiglu", "geglu")
+    out = {
+        "router": ParamSpec(prefix_shape + (d, E), L + (None, None), scale=0.1),
+        "wi": ParamSpec(prefix_shape + (Ep, d, f), up_axes),
+        "wo": ParamSpec(prefix_shape + (Ep, f, d), down_axes),
+    }
+    if gated:
+        out["wg"] = ParamSpec(prefix_shape + (Ep, d, f), up_axes)
+    if m.num_shared:
+        S = m.num_shared
+        out["shared_wi"] = ParamSpec(prefix_shape + (S, d, f), up_axes)
+        out["shared_wo"] = ParamSpec(prefix_shape + (S, f, d), down_axes)
+        if gated:
+            out["shared_wg"] = ParamSpec(prefix_shape + (S, d, f), up_axes)
+    return out
+
+
+def _act(g, u, act):
+    if act == "swiglu":
+        return jax.nn.silu(g) * u
+    if act == "geglu":
+        return jax.nn.gelu(g) * u
+    return jax.nn.gelu(u)
+
+
+def _expert_ffn(tokens, wi, wg, wo, act):
+    """tokens [E, C, d] -> [E, C, d] through per-expert FFNs."""
+    u = jnp.einsum("ecd,edf->ecf", tokens, wi)
+    if wg is not None:
+        g = jnp.einsum("ecd,edf->ecf", tokens, wg)
+        h = _act(g, u, act)
+    else:
+        h = _act(None, u, act)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: ArchConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based top-k MoE.  x [B, S, d] -> (y [B, S, d], aux_loss).
+
+    aux_loss is the standard load-balancing loss (Switch): E * sum_e
+    f_e * p_e, where f_e = fraction of tokens routed to e, p_e = mean
+    router prob.
+
+    dispatch='global'  sorts over all B*S tokens (baseline; replicated
+    dispatch buffers under GSPMD).
+    dispatch='grouped' vmaps the dispatch over the batch dim, so the
+    sort/gather/scatter stay local to each data shard; capacity is per
+    sequence (C = cf*S*K/E).  See EXPERIMENTS.md Sec-Perf / granite.
+    """
+    if cfg.moe.dispatch == "grouped":
+        return _moe_apply_grouped(params, x, cfg)
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    flat = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", flat, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, top_ids = jax.lax.top_k(probs, K)             # [T, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing aux loss ----
+    f = jnp.zeros((E,), jnp.float32).at[top_ids.reshape(-1)].add(1.0) / (T * K)
+    p = probs.mean(axis=0)
+    aux = E * jnp.sum(f * p)
+
+    # ---- sort-based capacity dispatch ----
+    Ep = m.e_padded          # dummy expert rows stay at the sentinel
+    C = max(1, int(m.capacity_factor * T * K / E))
+    flat_e = top_ids.reshape(-1)                              # [T*K]
+    flat_g = gate_vals.reshape(-1).astype(x.dtype)
+    flat_t = jnp.repeat(jnp.arange(T), K)                     # token index per slot
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # position within each expert's group
+    group_start = jnp.searchsorted(se, jnp.arange(E), side="left")
+    pos = jnp.arange(T * K) - group_start[se]
+    # dispatch index matrix: token id per (expert, slot); T = sentinel pad.
+    # over-capacity slots have pos >= C and are dropped by scatter mode.
+    disp = jnp.full((Ep, C), T, jnp.int32)
+    disp = disp.at[se, pos].set(st.astype(jnp.int32), mode="drop")
+    gmat = jnp.zeros((Ep, C), x.dtype)
+    gmat = gmat.at[se, pos].set(sg, mode="drop")
+
+    padded = jnp.concatenate([flat, jnp.zeros((1, d), flat.dtype)], axis=0)
+    gathered = padded[disp]                                   # [E, C, d]
+    gathered = constrain(gathered, "act_experts", None, None)
+
+    y = _expert_ffn(gathered, params["wi"], params.get("wg"), params["wo"], cfg.act)
+    y = y * gmat[..., None]
+
+    out = jnp.zeros((T + 1, d), y.dtype).at[disp.reshape(-1)].add(
+        y.reshape(Ep * C, d))[:T]
+
+    # ---- shared experts (always-on) ----
+    if m.num_shared:
+        sh = _expert_ffn(
+            jnp.broadcast_to(flat, (m.num_shared,) + flat.shape),
+            params["shared_wi"], params.get("shared_wg"),
+            params["shared_wo"], cfg.act).sum(0)
+        out = out + sh
+
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _moe_apply_grouped(params: dict, x: jax.Array, cfg: ArchConfig
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Per-sequence capacity dispatch (vmapped over batch).
+
+    Identical routing to the global path; only the capacity pool is per
+    sequence, so the sort/gather/scatter indices never cross the batch
+    dim — under GSPMD every dispatch buffer inherits the batch sharding
+    and stays on its data shard (no replicated [E, B*S*K/E, d] temps, no
+    all-gather of the sort keys).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    Ep = m.e_padded
+    C = max(1, int(m.capacity_factor * S * K / E))
+
+    logits = jnp.einsum("bsd,de->bse", x,
+                        params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, top_ids = jax.lax.top_k(probs, K)               # [B, S, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True),
+                                        1e-9)
+
+    f = jnp.zeros((E,), jnp.float32).at[top_ids.reshape(-1)].add(1.0) \
+        / (B * S * K)
+    aux = E * jnp.sum(f * probs.mean(axis=(0, 1)))
+
+    def dispatch_one(xb, ids, gates):
+        """xb [S, d]; ids/gates [S, K] -> (y [S, d])."""
+        flat_e = ids.reshape(-1)                               # [S*K]
+        flat_g = gates.reshape(-1).astype(xb.dtype)
+        flat_t = jnp.repeat(jnp.arange(S), K)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        group_start = jnp.searchsorted(se, jnp.arange(E), side="left")
+        pos = jnp.arange(S * K) - group_start[se]
+        disp = jnp.full((Ep, C), S, jnp.int32)
+        disp = disp.at[se, pos].set(st.astype(jnp.int32), mode="drop")
+        gmat = jnp.zeros((Ep, C), xb.dtype).at[se, pos].set(sg, mode="drop")
+        padded = jnp.concatenate([xb, jnp.zeros((1, d), xb.dtype)], axis=0)
+        return padded[disp], gmat, disp                        # [Ep, C, d]
+
+    gathered, gmat, disp = jax.vmap(dispatch_one)(x, top_ids, gate_vals)
+    gathered = constrain(gathered, "batch", "act_experts", None, None)
+
+    def ffn_b(g):
+        return _expert_ffn(g, params["wi"], params.get("wg"), params["wo"],
+                           cfg.act)
+
+    y = jax.vmap(ffn_b)(gathered) * gmat[..., None]            # [B, E, C, d]
+
+    def scatter_one(yb, dispb):
+        return jnp.zeros((S + 1, d), yb.dtype).at[dispb.reshape(-1)].add(
+            yb.reshape(Ep * C, d))[:S]
+
+    out = jax.vmap(scatter_one)(y, disp)                       # [B, S, d]
+
+    if m.num_shared:
+        flat = x.reshape(B * S, d)
+        sh = _expert_ffn(
+            jnp.broadcast_to(flat, (m.num_shared,) + flat.shape),
+            params["shared_wi"], params.get("shared_wg"),
+            params["shared_wo"], cfg.act).sum(0)
+        out = out + sh.reshape(B, S, d)
+
+    return out.astype(x.dtype), aux
+
+
+def moe_apply_dense(params: dict, x: jax.Array, cfg: ArchConfig
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle: run every expert on every token, weight by (renormalized)
+    top-k gates.  O(E) compute — test-only."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    flat = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", flat, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, top_ids = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    Ep = m.e_padded
+    dense_gates = jnp.zeros((T, Ep), jnp.float32)
+    dense_gates = jax.vmap(lambda g, i, row: row.at[i].set(g))(
+        gate_vals, top_ids, dense_gates)
+
+    all_y = _expert_ffn(
+        jnp.broadcast_to(flat, (Ep,) + flat.shape),
+        params["wi"], params.get("wg"), params["wo"], cfg.act)  # [Ep, T, d]
+    out = jnp.einsum("te,etd->td", dense_gates.astype(x.dtype), all_y)
+
+    f = jnp.zeros((E,), jnp.float32).at[top_ids.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(f * probs.mean(axis=0))
+
+    if m.num_shared:
+        sh = _expert_ffn(
+            jnp.broadcast_to(flat, (m.num_shared,) + flat.shape),
+            params["shared_wi"], params.get("shared_wg"),
+            params["shared_wo"], cfg.act).sum(0)
+        out = out + sh
+    return out.reshape(B, S, d).astype(x.dtype), aux

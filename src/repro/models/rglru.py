@@ -1,0 +1,151 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block = [linear x-branch + gelu gate-branch] -> causal depthwise conv ->
+input/recurrence gates -> RG-LRU diagonal linear recurrence -> gated
+output projection.
+
+    r_t = sigmoid(lowrank_a(u_t));  i_t = sigmoid(lowrank_x(u_t))
+    log a_t = -c * softplus(Lambda) * r_t           (c = 8)
+    h_t = exp(log a_t) * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The recurrence is a first-order linear scan -> jax.lax.associative_scan
+(train/prefill) or a single fused step (decode).  TPU adaptation: the
+diagonal recurrence is embarrassingly parallel over channels, so the
+channel dim is sharded over 'model' ('rnn' logical axis) and the scan is
+over time only.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist import constrain
+from .config import ArchConfig
+from .spec import ParamSpec
+
+__all__ = ["rec_block_specs", "rec_block_apply", "init_rec_cache",
+           "rglru_scan_ref"]
+
+_C = 8.0  # Griffin's gate sharpness constant
+
+
+def rec_block_specs(cfg: ArchConfig, prefix_shape=()) -> dict:
+    d, dr, cw = cfg.d_model, cfg.d_rnn, cfg.conv_width
+    rank = max(dr // 8, 8)
+    L = tuple("layers" for _ in prefix_shape)
+    from .blocks import norm_specs, mlp_specs  # avoid cycle at import time
+    return {
+        "ln1": norm_specs(cfg, prefix_shape),
+        "rec": {
+            "wx": ParamSpec(prefix_shape + (d, dr), L + (None, "rnn")),
+            "wgate": ParamSpec(prefix_shape + (d, dr), L + (None, "rnn")),
+            "conv_w": ParamSpec(prefix_shape + (cw, dr), L + ("conv_k", "rnn"),
+                                init="uniform_conv"),
+            "conv_b": ParamSpec(prefix_shape + (dr,), L + ("rnn",), init="zeros"),
+            "lam": ParamSpec(prefix_shape + (dr,), L + ("rnn",), init="ones",
+                             scale=0.65),
+            "wa_a": ParamSpec(prefix_shape + (dr, rank), L + ("rnn", "lora")),
+            "wa_b": ParamSpec(prefix_shape + (rank, dr), L + ("lora", "rnn")),
+            "wx_a": ParamSpec(prefix_shape + (dr, rank), L + ("rnn", "lora")),
+            "wx_b": ParamSpec(prefix_shape + (rank, dr), L + ("lora", "rnn")),
+            "wo": ParamSpec(prefix_shape + (dr, d), L + ("rnn", None)),
+        },
+        "ln2": norm_specs(cfg, prefix_shape),
+        "mlp": mlp_specs(cfg, prefix_shape),
+    }
+
+
+def init_rec_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    dr, cw = cfg.d_rnn, cfg.conv_width
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, dr), dtype),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                           prev: Optional[jax.Array] = None) -> jax.Array:
+    """x [B,S,dr], w [cw,dr]; left-pad with zeros or the cached tail."""
+    cw = w.shape[0]
+    if prev is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(cw))
+    return out + b
+
+
+def rglru_scan_ref(u: jax.Array, log_a: jax.Array, h0: Optional[jax.Array] = None
+                   ) -> jax.Array:
+    """Reference linear recurrence h_t = a_t h_{t-1} + b_t via associative
+    scan.  u = gated input sqrt(1-a^2)*i*x (fp32), log_a [B,S,dr]."""
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        # fold the carried state into the first step's input
+        u = u.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a_l, b_l = lhs
+        a_r, b_r = rhs
+        return a_l * a_r, b_l * a_r + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h
+
+
+def rec_block_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Pre-norm RG-LRU residual block + MLP.  Returns (y, new_cache)."""
+    from .layers import mlp, norm  # local import to avoid cycles
+
+    p = params["rec"]
+    B, S, _ = x.shape
+    h_in = norm(x, params["ln1"], cfg.norm, io=cfg.norm_io)
+    xb = jnp.einsum("bsd,de->bse", h_in, p["wx"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", h_in, p["wgate"]))
+    xb = constrain(xb, "batch", None, "act_mlp")
+
+    prev = None if cache is None else cache["conv"]
+    u = _causal_depthwise_conv(xb, p["conv_w"], p["conv_b"], prev)
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid((uf @ p["wa_a"].astype(jnp.float32))
+                       @ p["wa_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid((uf @ p["wx_a"].astype(jnp.float32))
+                       @ p["wx_b"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * uf)
+
+    use_pallas = cfg.seq_impl in ("pallas", "pallas_interpret")
+
+    def _scan(u_, la_, h0_=None):
+        if use_pallas:
+            from ..kernels import ops as _kops  # late import: no cycle
+            return _kops.rglru_scan(u_, la_, h0_, impl=cfg.seq_impl)
+        return rglru_scan_ref(u_, la_, h0_)
+
+    if cache is None:
+        h = _scan(gated_in, log_a)
+        new_cache = None
+    else:
+        if S == 1:
+            h = jnp.exp(log_a[:, 0]) * cache["h"] + gated_in[:, 0]
+            h = h[:, None]
+        else:
+            h = _scan(gated_in, log_a, cache["h"])
+        tail = jnp.concatenate([prev.astype(xb.dtype), xb], axis=1)[:, -(cfg.conv_width - 1):]
+        new_cache = {"h": h[:, -1].astype(jnp.float32), "conv": tail}
+
+    out = (gate * h.astype(gate.dtype)) @ p["wo"]
+    x = x + out
+
+    h2 = norm(x, params["ln2"], cfg.norm, io=cfg.norm_io)
+    return x + mlp(h2, params["mlp"], cfg.act), new_cache

@@ -1,0 +1,240 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time-mix with
+data-dependent per-channel decay, plus channel-mix.
+
+Time-mix recurrence per head (dh = head size, state S in R^{dh x dh}):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)      (u = per-head bonus)
+
+with w_t = exp(-exp(w0 + lora_w(x_t))) data-dependent decay.  Token shift
+mixes x_t with x_{t-1} via learned per-channel lerps (the v6 'ddlerp' is
+simplified to static mu per projection — the systems-relevant dataflow,
+state shape and decay structure are faithful).
+
+Two sequence impls:
+  * 'scan'    : lax.scan over time (reference; O(T) steps)
+  * 'chunked' : intra-chunk parallel + inter-chunk state carry (the form
+                the Pallas kernel implements; O(T/chunk) steps of dense
+                matmuls — MXU-friendly).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .spec import ParamSpec
+
+__all__ = ["rwkv_block_specs", "rwkv_block_apply", "init_rwkv_cache",
+           "wkv_scan_ref", "wkv_chunked"]
+
+_LORA = 64
+
+
+def rwkv_block_specs(cfg: ArchConfig, prefix_shape=()) -> dict:
+    d = cfg.d_model
+    H, dh = cfg.n_heads, cfg.d_head
+    assert H * dh == d, "rwkv requires n_heads * d_head == d_model"
+    L = tuple("layers" for _ in prefix_shape)
+    from .blocks import norm_specs
+    mm = lambda: ParamSpec(prefix_shape + (d, d), L + (None, "qkv"))
+    mu = lambda: ParamSpec(prefix_shape + (d,), L + (None,), init="zeros")
+    return {
+        "ln1": norm_specs(cfg, prefix_shape),
+        "tm": {
+            "mu_r": mu(), "mu_k": mu(), "mu_v": mu(), "mu_g": mu(), "mu_w": mu(),
+            "wr": mm(), "wk": mm(), "wv": mm(), "wg": mm(),
+            "w0": ParamSpec(prefix_shape + (d,), L + (None,), init="ones",
+                            scale=-4.0),
+            "w_a": ParamSpec(prefix_shape + (d, _LORA), L + (None, "lora")),
+            "w_b": ParamSpec(prefix_shape + (_LORA, d), L + ("lora", None)),
+            "u": ParamSpec(prefix_shape + (H, dh), L + ("heads", None),
+                           init="zeros"),
+            "wo": mm(),
+            "ln_x": ParamSpec(prefix_shape + (d,), L + (None,), init="ones"),
+        },
+        "ln2": norm_specs(cfg, prefix_shape),
+        "cm": {
+            "mu_k": mu(), "mu_r": mu(),
+            "wk": ParamSpec(prefix_shape + (d, cfg.d_ff), L + (None, "mlp")),
+            "wv": ParamSpec(prefix_shape + (cfg.d_ff, d), L + ("mlp", None)),
+            "wr": mm(),
+        },
+    }
+
+
+def init_rwkv_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    H, dh = cfg.n_heads, cfg.d_head
+    d = cfg.d_model
+    return {
+        "state": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "x_tm": jnp.zeros((batch, d), dtype),   # last token (time-mix shift)
+        "x_cm": jnp.zeros((batch, d), dtype),   # last token (channel-mix shift)
+    }
+
+
+def _token_shift(x: jax.Array, mu: jax.Array, prev: Optional[jax.Array]
+                 ) -> jax.Array:
+    """lerp(x_t, x_{t-1}, mu) with x_{-1} = prev (or zeros)."""
+    if prev is None:
+        xprev = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    else:
+        xprev = jnp.concatenate([prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    return x + mu * (xprev - x)
+
+
+def wkv_scan_ref(r, k, v, w, u, s0=None):
+    """Reference WKV recurrence.
+
+    r,k,v: [B,T,H,dh]; w: [B,T,H,dh] decay in (0,1); u: [H,dh].
+    Returns (o [B,T,H,dh], s_T [B,H,dh,dh]) with
+
+        o_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+        S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    B, T, H, dh = r.shape
+    s = jnp.zeros((B, H, dh, dh), jnp.float32) if s0 is None else s0
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # each [B,H,dh]
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, o_t
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    s, o = jax.lax.scan(step, s, xs)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype), s
+
+
+def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = 16):
+    """Chunked-parallel WKV (matches wkv_scan_ref; see tests).
+
+    Within a chunk of length c, with cumulative decays
+    W_t = prod_{j<=t} w_j (exclusive of j=t? see below):
+
+      contribution of state entering the chunk:  o_t += r_t (D_t * S_in)
+      intra-chunk:  o_t += sum_{j<t} (r_t . D_t/D_j+1 ...) — realized as a
+      lower-triangular (c x c) matmul of decay-weighted r, k plus the
+      diagonal u-bonus term.
+
+    All heavy ops are dense [c,c] / [c,dh] matmuls — the MXU-friendly form
+    the Pallas kernel mirrors.
+    """
+    B, T, H, dh = r.shape
+    assert T % chunk == 0, "pad sequence to a chunk multiple"
+    nch = T // chunk
+    f32 = jnp.float32
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.astype(f32).reshape(B, nch, chunk, H, dh), 1, 0)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))   # [nch, B, c, H, dh]
+    logw = jnp.log(jnp.maximum(wc, 1e-12))
+    cum = jnp.cumsum(logw, axis=2)                  # inclusive log-decay
+    cum_excl = cum - logw                           # exclusive (prod_{j<t})
+
+    s = jnp.zeros((B, H, dh, dh), f32) if s0 is None else s0.astype(f32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1)
+
+    def chunk_step(s, inp):
+        ri, ki, vi, ce, ci = inp
+        # state entering chunk, decayed by prod_{j<t} w_j = exp(ce_t)
+        r_dec = ri * jnp.exp(ce)
+        o_state = jnp.einsum("bthk,bhkv->bthv", r_dec, s)
+        # intra-chunk pairs (j < t): coefficient exp(ce_t - ci_j), realized
+        # as (r exp(ce)) . (k exp(-ci)); the wlog clamp in the caller bounds
+        # the exponent at chunk*5 = 80 < log(f32max)
+        k_dec = ki * jnp.exp(-ci)
+        scores = jnp.einsum("bthk,bjhk->bhtj", r_dec, k_dec) * tri[None, None]
+        o_intra = jnp.einsum("bhtj,bjhv->bthv", scores, vi)
+        # diagonal bonus: r_t . (u * k_t) v_t
+        bonus = jnp.einsum("bthk,bthk->bth", ri, u[None, None] * ki)
+        o = o_state + o_intra + bonus[..., None] * vi
+        # carry: S_out = diag(prod w) S_in + sum_j (prod_{l>j} w_l) k_j^T v_j
+        total = ci[:, -1]
+        k_carry = ki * jnp.exp(total[:, None] - ci)
+        s = jnp.exp(total)[..., None] * s + jnp.einsum(
+            "bjhk,bjhv->bhkv", k_carry, vi)
+        return s, o
+
+    s, o = jax.lax.scan(chunk_step, s, (rc, kc, vc, cum_excl, cum))
+    o = jnp.moveaxis(o, 0, 1).reshape(B, T, H, dh)
+    return o.astype(r.dtype), s
+
+
+def rwkv_block_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """RWKV6 residual block.  Returns (y, new_cache)."""
+    from .layers import norm
+
+    B, S, d = x.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    tm, cm = params["tm"], params["cm"]
+
+    # ---------------- time mix ----------------
+    h = norm(x, params["ln1"], cfg.norm, io=cfg.norm_io)
+    prev_tm = None if cache is None else cache["x_tm"]
+    xr = _token_shift(h, tm["mu_r"], prev_tm)
+    xk = _token_shift(h, tm["mu_k"], prev_tm)
+    xv = _token_shift(h, tm["mu_v"], prev_tm)
+    xg = _token_shift(h, tm["mu_g"], prev_tm)
+    xw = _token_shift(h, tm["mu_w"], prev_tm)
+
+    r = (xr @ tm["wr"]).reshape(B, S, H, dh)
+    k = (xk @ tm["wk"]).reshape(B, S, H, dh)
+    v = (xv @ tm["wv"]).reshape(B, S, H, dh)
+    g = jax.nn.silu(xg @ tm["wg"])
+    # data-dependent decay in (0,1): exp(-exp(.)).  wlog is clamped so the
+    # per-step log-decay lies in [-5, -6e-6]; with chunk=16 the chunked
+    # factorization's largest exponent is 16*5 = 80 < log(f32 max) ~ 88.7,
+    # so BOTH impls see the identical decay and stay exactly equivalent.
+    wlog = tm["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw.astype(jnp.float32) @ tm["w_a"].astype(jnp.float32))
+        @ tm["w_b"].astype(jnp.float32))
+    wlog = jnp.clip(wlog, -12.0, 1.609)
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B, S, H, dh)
+
+    s0 = None if cache is None else cache["state"]
+    impl = cfg.seq_impl
+    if impl == "auto":
+        impl = "chunked" if (cache is None and S % 16 == 0 and S >= 64) else "scan"
+    if impl in ("pallas", "pallas_interpret") and S % 16 == 0 and S >= 16:
+        from ..kernels import ops as _kops  # late import: no cycle
+        o, s_out = _kops.rwkv6_wkv(r, k, v, w, tm["u"].astype(jnp.float32),
+                                   s0, impl=impl, chunk=16)
+    elif impl == "chunked" and S % 16 == 0:
+        o, s_out = wkv_chunked(r, k, v, w, tm["u"].astype(jnp.float32), s0)
+    else:
+        o, s_out = wkv_scan_ref(r, k, v, w, tm["u"].astype(jnp.float32), s0)
+
+    # per-head group norm then gate
+    o = o.reshape(B, S, d).astype(jnp.float32)
+    oh = o.reshape(B, S, H, dh)
+    mu = oh.mean(-1, keepdims=True)
+    var = oh.var(-1, keepdims=True)
+    o = ((oh - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, d)
+    o = (o * tm["ln_x"]).astype(x.dtype)
+    x = x + (g * o) @ tm["wo"]
+
+    # ---------------- channel mix ----------------
+    h2 = norm(x, params["ln2"], cfg.norm, io=cfg.norm_io)
+    prev_cm = None if cache is None else cache["x_cm"]
+    xk2 = _token_shift(h2, cm["mu_k"], prev_cm)
+    xr2 = _token_shift(h2, cm["mu_r"], prev_cm)
+    kk = jnp.square(jax.nn.relu(xk2 @ cm["wk"]))
+    out = jax.nn.sigmoid(xr2 @ cm["wr"]) * (kk @ cm["wv"])
+    y = x + out
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": s_out, "x_tm": h[:, -1], "x_cm": h2[:, -1]}
+    return y, new_cache

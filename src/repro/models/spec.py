@@ -1,0 +1,95 @@
+"""Parameter-spec machinery: one source of truth for shapes, logical
+sharding axes and initializers.
+
+Models build a nested dict of `ParamSpec`s; from it we derive
+  * materialized parameters (init_params),
+  * ShapeDtypeStruct pytrees for allocation-free lowering (abstract_params),
+  * logical-axis pytrees consumed by repro.dist.sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "axes_tree",
+           "param_count", "param_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]       # logical axis name per dim (None = replicated)
+    init: str = "normal"                  # normal | zeros | ones | embed | uniform_conv
+    scale: float = 1.0                    # multiplier on the default fan-in scale
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    if len(shape) == 0:
+        return 1
+    if len(shape) == 1:
+        return shape[0]
+    # treat last dim as fan-out, everything else as fan-in
+    n = 1
+    for d in shape[:-1]:
+        n *= d
+    return max(n, 1)
+
+
+def _materialize(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape) * spec.scale).astype(spec.dtype)
+    if spec.init == "normal":
+        std = spec.scale / np.sqrt(_fan_in(spec.shape))
+        return (jax.random.normal(key, spec.shape) * std).astype(spec.dtype)
+    if spec.init == "uniform_conv":
+        lim = spec.scale / np.sqrt(_fan_in(spec.shape))
+        return jax.random.uniform(key, spec.shape, spec.dtype, -lim, lim)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(specs, rng: jax.Array):
+    """Materialize a spec tree into parameter arrays (deterministic per path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_materialize(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct tree — lower/compile without allocating."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec)
+
+
+def axes_tree(specs):
+    """Tree of logical-axes tuples (same structure as params)."""
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return int(sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                   for s in leaves))

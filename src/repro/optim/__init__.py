@@ -1,0 +1,12 @@
+"""Hand-rolled optimizer substrate: AdamW, schedules, ZeRO-1 sharding,
+gradient compression."""
+
+from .adamw import (  # noqa: F401
+    OptConfig,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+    opt_state_shardings,
+)
+from .schedules import make_schedule  # noqa: F401
+from . import compress  # noqa: F401

@@ -1,0 +1,45 @@
+"""Learning-rate schedules: cosine, constant, and WSD (Warmup-Stable-
+Decay, MiniCPM arXiv:2404.06395) — all pure functions of the step."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["make_schedule"]
+
+
+def _warmup(step, warmup_steps):
+    return jnp.minimum(1.0, (step + 1) / jnp.maximum(warmup_steps, 1))
+
+
+def make_schedule(name: str, base_lr: float, total_steps: int,
+                  warmup_steps: int = 100, min_ratio: float = 0.1,
+                  decay_frac: float = 0.1):
+    """Returns f(step) -> lr.
+
+    wsd: warmup -> flat at base_lr -> decay over the last decay_frac of
+    training (1 - sqrt progress, per MiniCPM), floored at min_ratio.
+    """
+    total = max(total_steps, 1)
+
+    def cosine(step):
+        w = _warmup(step, warmup_steps)
+        t = jnp.clip((step - warmup_steps) / max(total - warmup_steps, 1), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * w * cos
+
+    def const(step):
+        return base_lr * _warmup(step, warmup_steps)
+
+    def wsd(step):
+        w = _warmup(step, warmup_steps)
+        decay_start = total * (1 - decay_frac)
+        t = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1),
+                     0, 1)
+        decay = 1 - (1 - min_ratio) * jnp.sqrt(t)
+        return base_lr * w * decay
+
+    fns = {"cosine": cosine, "const": const, "wsd": wsd}
+    if name not in fns:
+        raise ValueError(f"unknown schedule {name!r}")
+    return fns[name]

@@ -1,0 +1,14 @@
+"""Runtime substrate: straggler models, wall-clock model, fault injection."""
+
+from .faults import FaultInjector, FaultPlan  # noqa: F401
+from .latency import StepTimeModel, simulate_wallclock  # noqa: F401
+from .straggler import (  # noqa: F401
+    AdversarialStragglers,
+    CorrelatedStragglers,
+    DeadlineStragglers,
+    FixedFractionStragglers,
+    IIDStragglers,
+    NoStragglers,
+    StragglerModel,
+    make_straggler_model,
+)

@@ -1,0 +1,42 @@
+"""Hard-fault injection + recovery policy.
+
+Distinct from stragglers (transient): a fault permanently removes a
+worker.  Recovery options the trainer supports:
+
+  * 'elastic'   — shrink the worker set, regenerate the gradient code for
+                  n' = n - failed (O(n s): the paper's cheap-construction
+                  property is exactly what makes this viable vs expander
+                  codes), remap data partitions, continue.
+  * 'restart'   — restore the last checkpoint with a fresh worker set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+__all__ = ["FaultPlan", "FaultInjector"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    step: int
+    workers: tuple  # worker ids to kill
+
+
+class FaultInjector:
+    def __init__(self, plans: Optional[List[FaultPlan]] = None):
+        self.plans = sorted(plans or [], key=lambda p: p.step)
+        self.dead: set = set()
+
+    def check(self, step: int) -> Optional[FaultPlan]:
+        for p in self.plans:
+            if p.step == step and not set(p.workers) <= self.dead:
+                self.dead |= set(p.workers)
+                return p
+        return None
+
+    def alive_count(self, n0: int) -> int:
+        return n0 - len(self.dead)

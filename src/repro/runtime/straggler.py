@@ -1,0 +1,139 @@
+"""Straggler models: who fails to report by the aggregation deadline.
+
+All models are deterministic given (seed, step) so every host in an SPMD
+job derives the same mask without communication — the TPU-native
+replacement for the paper's master observing arrivals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core import adversary as ADV
+
+__all__ = ["StragglerModel", "NoStragglers", "IIDStragglers",
+           "FixedFractionStragglers", "DeadlineStragglers",
+           "CorrelatedStragglers", "AdversarialStragglers", "make_straggler_model"]
+
+
+class StragglerModel:
+    """mask[j] == True  <=>  worker j is a NON-straggler this step."""
+
+    def sample(self, step: int, n: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def latencies(self, step: int, n: int) -> np.ndarray:
+        """Per-worker compute latencies (seconds) for the wall-clock model."""
+        rng = np.random.default_rng((hash((id(type(self)), step)) & 0xFFFF))
+        return np.ones(n)
+
+
+@dataclasses.dataclass
+class NoStragglers(StragglerModel):
+    def sample(self, step: int, n: int) -> np.ndarray:
+        return np.ones(n, dtype=bool)
+
+
+@dataclasses.dataclass
+class IIDStragglers(StragglerModel):
+    """Each worker independently straggles with probability delta."""
+    delta: float
+    seed: int = 0
+
+    def sample(self, step: int, n: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, step))
+        return rng.random(n) >= self.delta
+
+
+@dataclasses.dataclass
+class FixedFractionStragglers(StragglerModel):
+    """Exactly floor(delta*n) stragglers, uniformly chosen (the paper's
+    sampling model)."""
+    delta: float
+    seed: int = 0
+
+    def sample(self, step: int, n: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, step))
+        mask = np.ones(n, dtype=bool)
+        ns = int(self.delta * n)
+        if ns:
+            mask[rng.choice(n, ns, replace=False)] = False
+        return mask
+
+
+@dataclasses.dataclass
+class DeadlineStragglers(StragglerModel):
+    """Latency = base + Pareto(alpha) tail; straggler iff latency > deadline.
+
+    Matches the empirical 'slowest nodes dictate runtime' premise; the
+    latency draw is reused by runtime.latency for wall-clock estimates.
+    """
+    base: float = 1.0
+    tail_scale: float = 0.2
+    alpha: float = 2.0
+    deadline: float = 1.5
+    seed: int = 0
+
+    def latencies(self, step: int, n: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, step))
+        return self.base + self.tail_scale * (rng.pareto(self.alpha, n) + 1.0)
+
+    def sample(self, step: int, n: int) -> np.ndarray:
+        return self.latencies(step, n) <= self.deadline
+
+
+@dataclasses.dataclass
+class CorrelatedStragglers(StragglerModel):
+    """Pod-level correlated failures: a whole pod's workers straggle
+    together with prob p_pod; plus iid node-level noise p_node."""
+    pod_size: int
+    p_pod: float = 0.05
+    p_node: float = 0.05
+    seed: int = 0
+
+    def sample(self, step: int, n: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, step))
+        npods = -(-n // self.pod_size)
+        pod_ok = rng.random(npods) >= self.p_pod
+        node_ok = rng.random(n) >= self.p_node
+        mask = node_ok & np.repeat(pod_ok, self.pod_size)[:n]
+        return mask
+
+
+@dataclasses.dataclass
+class AdversarialStragglers(StragglerModel):
+    """Poly-time adversary (paper Sec. 4): FRC-structural if the code is an
+    FRC, else greedy; budget = floor(delta * n) stragglers per step."""
+    G: np.ndarray
+    delta: float
+    mode: str = "auto"  # auto | frc | greedy
+
+    def sample(self, step: int, n: int) -> np.ndarray:
+        budget = int(self.delta * n)
+        if budget == 0:
+            return np.ones(n, dtype=bool)
+        mode = self.mode
+        if mode == "auto":
+            # detect FRC structure: duplicated columns
+            cols = {self.G[:, j].tobytes() for j in range(self.G.shape[1])}
+            mode = "frc" if len(cols) < self.G.shape[1] else "greedy"
+        if mode == "frc":
+            return ADV.frc_adversarial_mask(self.G, budget)
+        return ADV.greedy_adversarial_mask(self.G, budget, objective="onestep")
+
+
+def make_straggler_model(name: str, **kw) -> StragglerModel:
+    models = {
+        "none": NoStragglers,
+        "iid": IIDStragglers,
+        "fixed": FixedFractionStragglers,
+        "deadline": DeadlineStragglers,
+        "correlated": CorrelatedStragglers,
+        "adversarial": AdversarialStragglers,
+    }
+    if name not in models:
+        raise ValueError(f"unknown straggler model {name!r}")
+    return models[name](**kw)

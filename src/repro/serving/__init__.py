@@ -1,0 +1,3 @@
+"""Serving runtime."""
+
+from .engine import Request, ServingEngine  # noqa: F401

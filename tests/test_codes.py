@@ -1,0 +1,113 @@
+"""Unit tests for gradient-code constructions."""
+
+import numpy as np
+import pytest
+
+from repro.core import codes as C
+
+
+RNG = lambda seed=0: np.random.default_rng(seed)
+
+
+class TestFRC:
+    def test_block_structure(self):
+        code = C.frc(k=12, n=12, s=3)
+        G = code.G
+        assert G.shape == (12, 12)
+        for b in range(4):
+            blk = G[b * 3 : (b + 1) * 3, b * 3 : (b + 1) * 3]
+            assert np.all(blk == 1)
+        assert G.sum() == 12 * 3  # s entries per column
+
+    def test_column_degree_exact(self):
+        code = C.frc(k=20, n=20, s=5)
+        assert np.all(code.col_degrees == 5)
+        assert np.all(code.row_degrees == 5)
+
+    def test_permutation_preserves_multiset(self):
+        a = C.frc(k=12, n=12, s=3)
+        b = C.frc(k=12, n=12, s=3, rng=RNG(7))
+        cols_a = sorted(a.G[:, j].tobytes() for j in range(12))
+        cols_b = sorted(b.G[:, j].tobytes() for j in range(12))
+        assert cols_a == cols_b
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(ValueError):
+            C.frc(k=10, n=10, s=3)  # s does not divide k
+        with pytest.raises(ValueError):
+            C.frc(k=10, n=8, s=2)  # n != k
+
+
+class TestBGC:
+    def test_density(self):
+        code = C.bgc(k=2000, n=2000, s=10, rng=RNG(1))
+        p_hat = code.G.mean()
+        assert abs(p_hat - 10 / 2000) < 0.001
+
+    def test_binary_entries(self):
+        code = C.bgc(k=50, n=50, s=5, rng=RNG(2))
+        assert set(np.unique(code.G)) <= {0.0, 1.0}
+
+    def test_deterministic_given_seed(self):
+        a = C.bgc(k=64, n=64, s=4, rng=RNG(3))
+        b = C.bgc(k=64, n=64, s=4, rng=RNG(3))
+        assert np.array_equal(a.G, b.G)
+
+
+class TestRBGC:
+    def test_degree_cap(self):
+        # Algorithm 3: no column may exceed 2s after regularization.
+        for seed in range(5):
+            code = C.rbgc(k=400, n=400, s=2, rng=RNG(seed))
+            assert code.max_col_degree <= 2 * code.s
+
+    def test_pruned_columns_have_degree_s(self):
+        rng = RNG(11)
+        k, s = 300, 2
+        raw = (np.random.default_rng(11).random((k, k)) < (s / k)).astype(float)
+        code = C.rbgc(k=k, n=k, s=s, rng=RNG(11))
+        heavy = raw.sum(axis=0) > 2 * s
+        if heavy.any():
+            assert np.all(code.G[:, heavy].sum(axis=0) == s)
+        # untouched columns identical
+        assert np.array_equal(code.G[:, ~heavy], raw[:, ~heavy])
+
+
+class TestSRegular:
+    def test_regularity_and_symmetry(self):
+        code = C.sregular(k=100, n=100, s=6, rng=RNG(4))
+        G = code.G
+        assert np.allclose(G, G.T)
+        assert np.all(G.sum(axis=0) == 6)
+        assert np.all(np.diag(G) == 0)
+
+    def test_spectral_gap_below_trivial(self):
+        code = C.sregular(k=200, n=200, s=8, rng=RNG(5))
+        lam = C.spectral_gap(code)
+        assert lam < 8  # second eigenvalue strictly below degree
+        # random regular graphs are near-Ramanujan: lambda ~ 2 sqrt(s-1)
+        assert lam < 2 * np.sqrt(7) * 1.5
+
+
+class TestCyclicAndUncoded:
+    def test_cyclic_degrees(self):
+        code = C.cyclic_repetition(k=16, n=16, s=3)
+        assert np.all(code.col_degrees == 3)
+        assert np.all(code.row_degrees == 3)
+
+    def test_uncoded_identity(self):
+        code = C.uncoded(k=8)
+        assert np.array_equal(code.G, np.eye(8))
+
+
+def test_registry_roundtrip():
+    for name in ["frc", "bgc", "rbgc", "sregular", "cyclic", "uncoded"]:
+        kw = {}
+        code = C.make_code(name, k=20, n=20, s=4, seed=9)
+        assert code.k == 20 and code.n == 20
+
+
+def test_elastic_rebuild():
+    code = C.make_code("bgc", k=32, n=32, s=4, seed=0)
+    smaller = code.with_workers(24, RNG(1))
+    assert smaller.n == 24 and smaller.k == 24 and smaller.s == 4

@@ -1,0 +1,294 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU; TPU is the
+target) vs the pure-jnp oracles in repro.kernels.ref.
+
+Covers: shape sweeps (block-aligned and ragged), dtype sweeps, GQA
+grouping, causal/window/softcap variants, carried state, and
+Hypothesis property tests on the decoders' coding-theoretic invariants.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype=np.float32, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(dtype)
+
+
+# ----------------------------- flash attention -------------------------------
+
+@pytest.mark.parametrize("B,Sq,Sk,H,Kv,dh", [
+    (2, 128, 128, 4, 2, 64),
+    (1, 256, 256, 8, 8, 64),     # MHA
+    (1, 96, 160, 4, 1, 32),      # MQA, ragged blocks
+    (2, 1, 128, 4, 2, 64),       # decode: single query
+    (1, 64, 64, 2, 2, 128),      # dh = 128 (MXU lane width)
+])
+def test_flash_attention_shapes(B, Sq, Sk, H, Kv, dh):
+    q, k, v = (_rand((B, Sq, H, dh)), _rand((B, Sk, Kv, dh)),
+               _rand((B, Sk, Kv, dh)))
+    qo = Sk - Sq if Sq <= Sk else 0
+    out = ops.attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        causal=True, q_offset=qo, impl="pallas_interpret",
+                        bq=64, bk=64)
+    want = ref.attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                             causal=True, q_offset=qo)
+    assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 32, 0.0), (True, 0, 30.0),
+    (False, 0, 0.0), (True, 16, 50.0),
+])
+def test_flash_attention_masks(causal, window, softcap):
+    B, S, H, Kv, dh = 1, 128, 4, 2, 64
+    q, k, v = _rand((B, S, H, dh)), _rand((B, S, Kv, dh)), _rand((B, S, Kv, dh))
+    out = ops.attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        causal=causal, window=window, softcap=softcap,
+                        impl="pallas_interpret", bq=32, bk=32)
+    want = ref.attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                             causal=causal, window=window, softcap=softcap)
+    assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    B, S, H, Kv, dh = 1, 128, 4, 2, 64
+    q = jnp.asarray(_rand((B, S, H, dh))).astype(dtype)
+    k = jnp.asarray(_rand((B, S, Kv, dh))).astype(dtype)
+    v = jnp.asarray(_rand((B, S, Kv, dh))).astype(dtype)
+    out = ops.attention(q, k, v, impl="pallas_interpret", bq=64, bk=64)
+    want = ref.attention_ref(q, k, v)
+    assert out.dtype == dtype
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                    atol=tol, rtol=tol)
+
+
+def test_flash_matches_model_attention_path():
+    """The model-level attention() with impl=pallas_interpret must agree
+    with its own xla_naive path (the production dry-run path)."""
+    from repro.models.layers import attention
+    B, S, H, Kv, dh = 2, 128, 4, 2, 64
+    q, k, v = (jnp.asarray(_rand((B, S, H, dh))),
+               jnp.asarray(_rand((B, S, Kv, dh))),
+               jnp.asarray(_rand((B, S, Kv, dh))))
+    a = attention(q, k, v, causal=True, impl="pallas_interpret")
+    b = attention(q, k, v, causal=True, impl="xla_naive")
+    assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)
+
+
+# ----------------------------- rglru scan ------------------------------------
+
+@pytest.mark.parametrize("B,S,D,chunk,bd", [
+    (2, 64, 128, 32, 64),
+    (1, 100, 96, 32, 64),        # ragged both dims
+    (3, 256, 256, 128, 128),
+    (1, 1, 64, 16, 64),          # single step
+])
+def test_rglru_scan_shapes(B, S, D, chunk, bd):
+    u = _rand((B, S, D))
+    la = -np.abs(_rand((B, S, D)))
+    h0 = _rand((B, D))
+    out = ops.rglru_scan(jnp.asarray(u), jnp.asarray(la), jnp.asarray(h0),
+                         impl="pallas_interpret", chunk=chunk, bd=bd)
+    want = ref.rglru_scan_ref(jnp.asarray(u), jnp.asarray(la), jnp.asarray(h0))
+    assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_matches_associative_scan():
+    """Kernel vs the production associative-scan path in models.rglru."""
+    from repro.models.rglru import rglru_scan_ref as assoc_ref
+    B, S, D = 2, 96, 64
+    u = jnp.asarray(_rand((B, S, D)))
+    la = jnp.asarray(-np.abs(_rand((B, S, D))))
+    h0 = jnp.asarray(_rand((B, D)))
+    out = ops.rglru_scan(u, la, h0, impl="pallas_interpret", chunk=32, bd=64)
+    want = assoc_ref(u, la, h0=h0)
+    assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------- rwkv6 wkv -------------------------------------
+
+def _wkv_inputs(B, T, H, dh):
+    r = _rand((B, T, H, dh), scale=0.5)
+    k = _rand((B, T, H, dh), scale=0.5)
+    v = _rand((B, T, H, dh), scale=0.5)
+    wlog = np.clip(RNG.standard_normal((B, T, H, dh)), -12, 1.609)
+    w = np.exp(-np.exp(wlog)).astype(np.float32)
+    u = _rand((H, dh), scale=0.3)
+    return tuple(map(jnp.asarray, (r, k, v, w, u)))
+
+
+@pytest.mark.parametrize("B,T,H,dh,chunk", [
+    (2, 64, 2, 32, 16),
+    (1, 48, 3, 64, 16),
+    (1, 100, 2, 32, 32),         # ragged chunk
+    (2, 32, 4, 128, 32),         # dh = 128
+])
+def test_wkv_shapes(B, T, H, dh, chunk):
+    r, k, v, w, u = _wkv_inputs(B, T, H, dh)
+    s0 = jnp.asarray(_rand((B, H, dh, dh), scale=0.3))
+    o, s = ops.rwkv6_wkv(r, k, v, w, u, s0, impl="pallas_interpret",
+                         chunk=chunk)
+    o_ref, s_ref = ref.wkv_ref(r, k, v, w, u, s0)
+    assert_allclose(np.asarray(o), np.asarray(o_ref), atol=5e-4, rtol=5e-4)
+    assert_allclose(np.asarray(s), np.asarray(s_ref), atol=5e-4, rtol=5e-4)
+
+
+def test_wkv_matches_chunked_model_impl():
+    from repro.models.rwkv6 import wkv_chunked
+    B, T, H, dh = 1, 64, 2, 32
+    r, k, v, w, u = _wkv_inputs(B, T, H, dh)
+    o_k, s_k = ops.rwkv6_wkv(r, k, v, w, u, impl="pallas_interpret", chunk=16)
+    o_c, s_c = wkv_chunked(r, k, v, w, u, chunk=16)
+    assert_allclose(np.asarray(o_k), np.asarray(o_c), atol=5e-4, rtol=5e-4)
+    assert_allclose(np.asarray(s_k), np.asarray(s_c), atol=5e-4, rtol=5e-4)
+
+
+# ----------------------------- coded kernels ---------------------------------
+
+@pytest.mark.parametrize("k,P,bp", [(8, 1000, 256), (32, 4096, 2048),
+                                    (5, 17, 8), (64, 8192, 1024)])
+def test_coded_accumulate(k, P, bp):
+    g, w = _rand((k, P)), _rand((k,))
+    out = ops.coded_accumulate(jnp.asarray(g), jnp.asarray(w),
+                               impl="pallas_interpret", bp=bp)
+    want = ref.coded_accumulate_ref(jnp.asarray(g), jnp.asarray(w))
+    assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("k,n,s", [(100, 100, 10), (257, 123, 7),
+                                   (512, 512, 18)])
+def test_onestep_decode_kernel(k, n, s):
+    G = (RNG.random((k, n)) < s / k).astype(np.float32)
+    mask = RNG.random(n) < 0.7
+    r = max(int(mask.sum()), 1)
+    rho = k / (r * s)
+    out = ops.onestep_decode(jnp.asarray(G), jnp.asarray(mask), rho,
+                             impl="pallas_interpret", bk=128, bn=128)
+    want = ref.onestep_decode_ref(jnp.asarray(G), jnp.asarray(mask), rho)
+    assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+def test_onestep_kernel_matches_core_decoder():
+    """Kernel output == numpy core decoder (the paper's Algorithm 1)."""
+    from repro.core import codes, decoding
+    code = codes.bgc(k=96, n=96, s=8, rng=np.random.default_rng(5))
+    mask = np.random.default_rng(6).random(96) < 0.75
+    r = int(mask.sum())
+    rho = decoding.default_rho(96, r, 8)
+    v_np, _ = decoding.onestep_decode(code.G, mask, rho)
+    v_k = ops.onestep_decode(jnp.asarray(code.G), jnp.asarray(mask), rho,
+                             impl="pallas_interpret")
+    assert_allclose(np.asarray(v_k), v_np, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("k,n,s,iters", [(100, 100, 10, 4), (130, 70, 5, 8)])
+def test_algorithmic_decode_kernel(k, n, s, iters):
+    G = (RNG.random((k, n)) < s / k).astype(np.float32)
+    mask = RNG.random(n) < 0.7
+    A = G[:, mask]
+    nu = float(np.linalg.norm(A, 2) ** 2) * 1.01
+    out = ops.algorithmic_decode(jnp.asarray(G), jnp.asarray(mask), nu, iters,
+                                 impl="pallas_interpret", bk=64, bn=64)
+    want = ref.algorithmic_decode_ref(jnp.asarray(A), nu, iters)
+    assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+# --------------------------- property tests ----------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(16, 80), n=st.integers(16, 80),
+       s=st.integers(2, 8), seed=st.integers(0, 10_000))
+def test_property_onestep_full_mask_frc_exact(k, n, s, seed):
+    """FRC + no stragglers + rho=k/(rs): one-step decode is EXACT (the
+    paper's rho calibration, Sec. 2)."""
+    from repro.core import codes
+    k = (k // s) * s
+    if k < 2 * s:
+        k = 2 * s
+    code = codes.frc(k=k, n=k, s=s)
+    mask = np.ones(k, bool)
+    rho = k / (k * s)
+    v = ops.onestep_decode(jnp.asarray(code.G), jnp.asarray(mask), rho,
+                           impl="pallas_interpret", bk=32, bn=32)
+    assert_allclose(np.asarray(v), np.ones(k), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(20, 100), s=st.integers(2, 10),
+       frac=st.floats(0.3, 1.0), seed=st.integers(0, 10_000))
+def test_property_algorithmic_error_monotone(k, s, frac, seed):
+    """Lemma 12: ||u_t||^2 is non-increasing in t and >= err(A)."""
+    rng = np.random.default_rng(seed)
+    G = (rng.random((k, k)) < s / k).astype(np.float32)
+    mask = rng.random(k) < frac
+    A = G[:, mask]
+    if A.shape[1] == 0:
+        return
+    nu = float(np.linalg.norm(A, 2) ** 2) * 1.05 + 1e-6
+    errs = []
+    for t in (1, 2, 4):
+        u = ops.algorithmic_decode(jnp.asarray(G), jnp.asarray(mask), nu, t,
+                                   impl="pallas_interpret", bk=32, bn=32)
+        errs.append(float(jnp.sum(u * u)))
+    assert errs[0] >= errs[1] - 1e-4 >= errs[2] - 2e-4
+    err_opt = float(np.sum((A @ np.linalg.pinv(A) @ np.ones(k) - 1) ** 2))
+    assert errs[-1] >= err_opt - 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(4, 32), p=st.integers(10, 300), seed=st.integers(0, 9999))
+def test_property_accumulate_linear(k, p, seed):
+    """coded_accumulate is linear in the weights (decode-as-reweighting
+    identity, DESIGN.md 2.1)."""
+    rng = np.random.default_rng(seed)
+    g = rng.standard_normal((k, p)).astype(np.float32)
+    w1 = rng.standard_normal(k).astype(np.float32)
+    w2 = rng.standard_normal(k).astype(np.float32)
+    f = lambda w: np.asarray(ops.coded_accumulate(
+        jnp.asarray(g), jnp.asarray(w), impl="pallas_interpret", bp=64))
+    assert_allclose(f(w1) + f(w2), f(w1 + w2), atol=1e-3, rtol=1e-3)
+
+
+# ------------------- model-level kernel-swap parity ---------------------------
+
+def _tiny_batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S))),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S))),
+        "loss_weight": jnp.full((B,), 1.0 / B, jnp.float32),
+    }
+
+
+@pytest.mark.parametrize("arch,field", [
+    ("starcoder2-7b", "attn_impl"),        # dense attention -> flash kernel
+    ("recurrentgemma-9b", "seq_impl"),     # RG-LRU -> rglru kernel
+    ("rwkv6-3b", "seq_impl"),              # WKV -> chunked kernel
+])
+def test_model_forward_pallas_parity(arch, field):
+    """Swapping the Pallas kernel into the full model graph preserves the
+    loss (reduced config, interpret mode)."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _tiny_batch(cfg)
+    loss_ref, _ = model.loss_fn(params, batch)
+
+    cfg_k = dataclasses.replace(cfg, **{field: "pallas_interpret"})
+    model_k = build_model(cfg_k)
+    loss_k, _ = model_k.loss_fn(params, batch)
+    assert_allclose(float(loss_k), float(loss_ref), atol=5e-4, rtol=5e-4)

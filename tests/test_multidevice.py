@@ -1,0 +1,188 @@
+"""Multi-device integration: REAL sharded execution (not just lowering)
+on 8 host CPU devices in a subprocess (XLA_FLAGS must be set before jax
+imports, so these run out-of-process).
+
+Covers: pjit'd coded train step on a (pod=2, data=2, model=2) mesh with
+logical-axis shardings + FSDP, grouped-MoE dispatch under a data axis,
+and the rwkv6 batch_shard_model rules — the executable counterpart of
+the 512-device dry-run.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run(body: str, timeout: int = 560) -> dict:
+    """Run `body` in a subprocess with 8 host devices; it must print a
+    single JSON line starting with RESULT:."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import numpy as np
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.dist.sharding import param_shardings, rules_for, \\
+            use_mesh, use_rules
+        from repro.launch.mesh import make_debug_mesh
+        from repro.optim import OptConfig, adamw_update, init_opt_state
+    """) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run([sys.executable, "-c", prog], cwd=REPO, env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    line = [ln for ln in out.stdout.splitlines() if ln.startswith("RESULT:")]
+    assert line, f"no RESULT in stdout:\n{out.stdout[-2000:]}"
+    return json.loads(line[-1][len("RESULT:"):])
+
+
+def test_sharded_coded_train_step_executes():
+    """Coded train step (decode-as-loss-reweighting) actually runs
+    sharded on a (pod,data,model) mesh; params update; loss finite;
+    a second step with a different straggler mask also runs."""
+    res = _run("""
+        from repro.core import codes, decoding
+
+        cfg = get_config("starcoder2-7b", smoke=True)
+        model = build_model(cfg)
+        mesh = make_debug_mesh(data=2, model=2, pod=2)
+
+        n, s = 8, 2
+        code = codes.frc(k=n, n=n, s=s)
+        rng = np.random.default_rng(0)
+
+        with use_mesh(mesh), use_rules(rules_for(cfg)):
+            params = model.init(jax.random.PRNGKey(0))
+            p_sh = param_shardings(model.param_axes(), params, mesh,
+                                   fsdp=True)
+            params = jax.device_put(params, p_sh)
+            opt = init_opt_state(params)
+            ocfg = OptConfig(lr=1e-3)
+
+            B, S = 8, 32
+            bspec = NamedSharding(mesh, P(("pod", "data")))
+
+            def make_batch(step):
+                mask = np.ones(n, bool)
+                mask[rng.choice(n, 2, replace=False)] = False
+                w = decoding.decode_weights(code.G, mask, "onestep")
+                lw = (code.G @ w / (n * 1.0)).astype(np.float32)
+                return {
+                    "tokens": jnp.asarray(
+                        rng.integers(0, cfg.vocab, (B, S))),
+                    "labels": jnp.asarray(
+                        rng.integers(0, cfg.vocab, (B, S))),
+                    "loss_weight": jnp.asarray(lw),
+                }
+
+            @jax.jit
+            def step(params, opt, batch):
+                (loss, m), g = jax.value_and_grad(
+                    model.loss_fn, has_aux=True)(params, batch)
+                params, opt, _ = adamw_update(params, g, opt, ocfg,
+                                              jnp.float32(1e-3))
+                return params, opt, loss
+
+            p0 = jax.tree_util.tree_leaves(params)[0]
+            losses = []
+            for t in range(2):
+                batch = jax.device_put(
+                    make_batch(t),
+                    {k: bspec if v.ndim >= 1 else None
+                     for k, v in make_batch(t).items()})
+                params, opt, loss = step(params, opt, batch)
+                losses.append(float(loss))
+            p1 = jax.tree_util.tree_leaves(params)[0]
+            emb_sh = p_sh["embed"].spec
+
+        print("RESULT:" + json.dumps({
+            "losses": losses,
+            "params_changed": bool(abs(np.asarray(p1 - p0)).sum() > 0),
+            "n_devices": jax.device_count(),
+            "embed_spec": [str(x) for x in emb_sh],
+        }))
+    """)
+    assert res["n_devices"] == 8
+    assert all(np.isfinite(v) for v in res["losses"])
+    assert res["params_changed"]
+    assert "vocab" not in res["embed_spec"]  # logical name resolved away
+
+
+import numpy as np  # noqa: E402  (used in asserts above)
+
+
+def test_grouped_moe_sharded_execution():
+    """Grouped dispatch executes under a real data axis and matches the
+    single-device global-dispatch loss."""
+    res = _run("""
+        import dataclasses
+        cfg = get_config("granite-moe-3b-a800m", smoke=True)
+        cfg_g = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch="grouped"))
+        model = build_model(cfg_g)
+        rng = np.random.default_rng(0)
+        B, S = 4, 32
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S))),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S))),
+            "loss_weight": jnp.full((B,), 1.0 / B, jnp.float32),
+        }
+        params = model.init(jax.random.PRNGKey(0))
+        l_ref = float(model.loss_fn(params, batch)[0])  # unsharded
+
+        mesh = make_debug_mesh(data=4, model=2)
+        with use_mesh(mesh), use_rules(rules_for(cfg_g)):
+            p_sh = param_shardings(model.param_axes(), params, mesh)
+            params_s = jax.device_put(params, p_sh)
+            bspec = NamedSharding(mesh, P("data"))
+            batch_s = {k: jax.device_put(v, bspec) for k, v in batch.items()}
+            loss_s = float(jax.jit(
+                lambda p, b: model.loss_fn(p, b)[0])(params_s, batch_s))
+        print("RESULT:" + json.dumps({"ref": l_ref, "sharded": loss_s}))
+    """)
+    assert abs(res["ref"] - res["sharded"]) < 5e-4
+
+
+def test_rwkv6_batch_shard_model_executes():
+    """batch_shard_model rules execute: batch spreads over data AND
+    model axes, loss matches the unsharded reference."""
+    res = _run("""
+        import dataclasses
+        cfg = dataclasses.replace(get_config("rwkv6-3b", smoke=True),
+                                  batch_shard_model=True)
+        model = build_model(cfg)
+        rng = np.random.default_rng(1)
+        B, S = 8, 32
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S))),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S))),
+            "loss_weight": jnp.full((B,), 1.0 / B, jnp.float32),
+        }
+        params = model.init(jax.random.PRNGKey(0))
+        l_ref = float(model.loss_fn(params, batch)[0])
+
+        mesh = make_debug_mesh(data=4, model=2)
+        rules = rules_for(cfg)
+        with use_mesh(mesh), use_rules(rules):
+            p_sh = param_shardings(model.param_axes(), params, mesh)
+            params_s = jax.device_put(params, p_sh)
+            bspec = NamedSharding(mesh, P(("data", "model")))
+            batch_s = {k: jax.device_put(v, bspec) for k, v in batch.items()}
+            loss_s = float(jax.jit(
+                lambda p, b: model.loss_fn(p, b)[0])(params_s, batch_s))
+        print("RESULT:" + json.dumps({
+            "ref": l_ref, "sharded": loss_s,
+            "batch_rule": str(rules["batch"][0])}))
+    """)
+    assert abs(res["ref"] - res["sharded"]) < 5e-4

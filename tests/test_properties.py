@@ -1,0 +1,175 @@
+"""Hypothesis property-based tests for system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adversary as ADV
+from repro.core import assignment as ASG
+from repro.core import codes as C
+from repro.core import decoding as D
+
+
+# ------------------------- strategies -------------------------------------
+
+def code_params():
+    return st.tuples(
+        st.sampled_from([12, 20, 24, 40, 60]),       # k (= n)
+        st.integers(min_value=1, max_value=6),        # s
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+
+
+def _make(scheme, k, s, seed):
+    rng = np.random.default_rng(seed)
+    if scheme == "frc":
+        s = max(1, s)
+        while k % s:
+            s -= 1
+        return C.frc(k, k, s, rng=rng)
+    if scheme == "sregular":
+        s = min(max(2, s), k - 1)
+        if (k * s) % 2:
+            s += 1
+        return C.sregular(k, k, s, rng=rng)
+    return C.make_code(scheme, k=k, n=k, s=s, rng=rng)
+
+
+SCHEMES = ["frc", "bgc", "rbgc", "cyclic"]
+
+
+# ------------------------- invariants --------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(code_params(), st.sampled_from(SCHEMES), st.floats(0.0, 0.8))
+def test_err_bounded_by_k(params, scheme, delta):
+    """0 <= err(A) <= k for any code and any straggler set (Def. 1)."""
+    k, s, seed = params
+    code = _make(scheme, k, s, seed)
+    rng = np.random.default_rng(seed + 1)
+    mask = np.ones(k, dtype=bool)
+    nstr = int(delta * k)
+    if nstr:
+        mask[rng.choice(k, nstr, replace=False)] = False
+    e = D.err(code.G[:, mask])
+    assert -1e-8 <= e <= k + 1e-8
+
+
+@settings(max_examples=60, deadline=None)
+@given(code_params(), st.sampled_from(SCHEMES), st.floats(0.0, 0.8))
+def test_onestep_dominates_optimal(params, scheme, delta):
+    """err_1(A) >= err(A) always (optimal decoding is optimal)."""
+    k, s, seed = params
+    code = _make(scheme, k, s, seed)
+    rng = np.random.default_rng(seed + 2)
+    mask = np.ones(k, dtype=bool)
+    nstr = int(delta * k)
+    if nstr:
+        mask[rng.choice(k, nstr, replace=False)] = False
+    A = code.G[:, mask]
+    rho = D.default_rho(k, int(mask.sum()), code.s)
+    assert D.err1(A, rho) >= D.err(A) - 1e-8
+
+
+@settings(max_examples=40, deadline=None)
+@given(code_params(), st.sampled_from(SCHEMES))
+def test_algorithmic_curve_monotone(params, scheme):
+    """Lemma 12: ||u_t||^2 is non-increasing and lower-bounded by err(A)."""
+    k, s, seed = params
+    code = _make(scheme, k, s, seed)
+    rng = np.random.default_rng(seed + 3)
+    mask = np.ones(k, dtype=bool)
+    mask[rng.choice(k, k // 4, replace=False)] = False
+    A = code.G[:, mask]
+    curve = D.algorithmic_error_curve(A, iters=30)
+    assert np.all(np.diff(curve) <= 1e-7)
+    assert np.all(curve >= D.err(A) - 1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(code_params())
+def test_rbgc_degree_cap(params):
+    """Algorithm 3 invariant: max column degree <= 2s."""
+    k, s, seed = params
+    code = _make("rbgc", k, s, seed)
+    assert code.max_col_degree <= 2 * code.s
+
+
+@settings(max_examples=40, deadline=None)
+@given(code_params(), st.sampled_from(SCHEMES))
+def test_adding_workers_never_hurts(params, scheme):
+    """err(A') <= err(A) when A' has a superset of A's columns (more
+    non-stragglers can only improve the optimal decode)."""
+    k, s, seed = params
+    code = _make(scheme, k, s, seed)
+    rng = np.random.default_rng(seed + 4)
+    mask = np.ones(k, dtype=bool)
+    mask[rng.choice(k, k // 2, replace=False)] = False
+    bigger = mask.copy()
+    bigger[rng.choice(np.flatnonzero(~mask))] = True
+    assert D.err(code.G[:, bigger]) <= D.err(code.G[:, mask]) + 1e-8
+
+
+@settings(max_examples=40, deadline=None)
+@given(code_params(), st.sampled_from(SCHEMES))
+def test_column_permutation_invariance(params, scheme):
+    """err is invariant to worker relabeling."""
+    k, s, seed = params
+    code = _make(scheme, k, s, seed)
+    rng = np.random.default_rng(seed + 5)
+    mask = np.ones(k, dtype=bool)
+    mask[rng.choice(k, k // 3, replace=False)] = False
+    perm = rng.permutation(k)
+    e1 = D.err(code.G[:, mask])
+    e2 = D.err(code.G[:, perm][:, mask[perm]])
+    assert abs(e1 - e2) <= 1e-7
+
+
+@settings(max_examples=40, deadline=None)
+@given(code_params(), st.sampled_from(SCHEMES), st.floats(0.0, 0.6))
+def test_decode_weights_zero_on_stragglers(params, scheme, delta):
+    k, s, seed = params
+    code = _make(scheme, k, s, seed)
+    rng = np.random.default_rng(seed + 6)
+    mask = np.ones(k, dtype=bool)
+    nstr = int(delta * k)
+    if nstr:
+        mask[rng.choice(k, nstr, replace=False)] = False
+    for method in ["onestep", "optimal"]:
+        w = D.decode_weights(code.G, mask, method=method)
+        assert np.all(w[~mask] == 0.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(code_params(), st.sampled_from(SCHEMES))
+def test_assignment_reconstructs_mean_loss(params, scheme):
+    """With no stragglers + an exact-decode code (or optimal weights), the
+    reweighted physical batch reproduces the mean over unique examples."""
+    k, s, seed = params
+    code = _make(scheme, k, s, seed)
+    asg = ASG.build_assignment(code)
+    rng = np.random.default_rng(seed + 7)
+    T = 3  # rows per slot
+    losses_unique = rng.normal(size=(k, T))  # per unique example
+    mask = np.ones(code.n, dtype=bool)
+    w = D.optimal_weights(code.G, mask)
+    v = code.G @ w
+    if not np.allclose(v, 1.0, atol=1e-8):
+        return  # decode not exact for this draw; identity holds only then
+    rows = asg.unique_row_of_slot(T)
+    weights = asg.row_weights(w, T)
+    flat = np.where(rows >= 0, losses_unique.reshape(-1)[np.maximum(rows, 0)], 0.0)
+    got = float((weights * flat).sum())
+    want = float(losses_unique.mean())
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(8, 40), st.integers(2, 5), st.integers(0, 1000))
+def test_frc_adversary_matches_thm10(k_blocks, s, seed):
+    """Adversarial FRC error == k - r whenever budget is a multiple of s."""
+    k = k_blocks * s
+    code = C.frc(k, k, s, rng=np.random.default_rng(seed))
+    budget = s * max(1, k_blocks // 3)
+    mask = ADV.frc_adversarial_mask(code.G, budget)
+    r = k - budget
+    assert D.err(code.G[:, mask]) == np.float64(k - r)

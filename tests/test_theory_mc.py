@@ -1,0 +1,212 @@
+"""Monte-Carlo validation of the paper's closed-form theorems."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import codes as C
+from repro.core import decoding as D
+from repro.core import simulate as S
+from repro.core import theory as T
+
+
+RNG = lambda seed=0: np.random.default_rng(seed)
+
+
+class TestTheorem5:
+    """E[err_1(A_frac)] closed form vs Monte Carlo.
+
+    NOTE: the paper's Lemma 4 uses P(duplicate) = (s-1)/k; the exact
+    without-replacement probability is (s-1)/(k-1).  MC matches the
+    corrected closed form (thm5_expected_err1_frc_exact); the paper's
+    formula is its k->inf limit (off by Theta(1) at k=100).
+    """
+
+    @pytest.mark.parametrize("delta,s", [(0.1, 5), (0.3, 5), (0.5, 10)])
+    def test_mc_matches_exact_closed_form(self, delta, s):
+        k = 100
+        r = int(round((1 - delta) * k))
+        rng = RNG(42)
+        code = C.frc(k=k, n=k, s=s)
+        trials = 3000
+        acc = 0.0
+        for _ in range(trials):
+            mask = S.sample_straggler_mask(k, k - r, rng)
+            acc += D.err1(code.G[:, mask], D.default_rho(k, r, s))
+        mc = acc / trials
+        expected = T.thm5_expected_err1_frc_exact(k, s, r)
+        assert mc == pytest.approx(expected, rel=0.08, abs=0.05)
+
+    def test_paper_formula_gap_characterized(self):
+        """The stated Thm-5 formula understates the exact expectation by an
+        additive term k(r-1)(s-1)/(r s (k-1)) -> (s-1)/s; the *relative*
+        error vanishes as k grows (the formula is correct to leading
+        order)."""
+        s, delta = 5, 0.2
+        for k in [100, 1000, 10000]:
+            r = int((1 - delta) * k)
+            exact = T.thm5_expected_err1_frc_exact(k, s, r)
+            paper = T.thm5_expected_err1_frc(k, s, delta)
+            gap = exact - paper
+            predicted_gap = k * (r - 1) * (s - 1) / (r * s * (k - 1))
+            assert gap == pytest.approx(predicted_gap, rel=1e-9)
+            assert gap == pytest.approx((s - 1) / s, abs=0.01)
+        # relative error vanishes
+        r = int((1 - delta) * 10000)
+        assert (T.thm5_expected_err1_frc_exact(10000, s, r)
+                - T.thm5_expected_err1_frc(10000, s, delta)) \
+            / T.thm5_expected_err1_frc_exact(10000, s, r) < 0.01
+
+
+class TestTheorem6:
+    @pytest.mark.parametrize("delta,s", [(0.2, 5), (0.4, 10)])
+    def test_mc_matches_closed_form(self, delta, s):
+        k = 100
+        r = int(round((1 - delta) * k))
+        rng = RNG(7)
+        code = C.frc(k=k, n=k, s=s)
+        trials = 4000
+        acc = 0.0
+        for _ in range(trials):
+            mask = S.sample_straggler_mask(k, k - r, rng)
+            acc += D.err(code.G[:, mask])
+        mc = acc / trials
+        expected = T.thm6_expected_err_frc(k, s, r)
+        assert mc == pytest.approx(expected, rel=0.2, abs=0.05)
+
+    def test_distribution_sums_to_one(self):
+        pmf = T.frc_err_distribution(k=100, s=5, r=70)
+        assert pmf.sum() == pytest.approx(1.0, abs=1e-9)
+        # expected value from pmf must equal Thm 6 / s
+        mean_blocks = float((np.arange(len(pmf)) * pmf).sum())
+        assert mean_blocks * 5 == pytest.approx(
+            T.thm6_expected_err_frc(100, 5, 70), rel=1e-9)
+
+
+class TestTheorem7and8:
+    def test_tail_bound_holds_empirically(self):
+        k, s, delta = 100, 10, 0.3
+        r = int((1 - delta) * k)
+        rng = RNG(3)
+        code = C.frc(k=k, n=k, s=s)
+        trials = 2000
+        for alpha in [0, 1, 2]:
+            bound = T.thm7_tail_frc(k, s, r, alpha)
+            emp = 0
+            for _ in range(trials):
+                mask = S.sample_straggler_mask(k, k - r, rng)
+                if D.err(code.G[:, mask]) > alpha * s + 1e-9:
+                    emp += 1
+            assert emp / trials <= bound + 0.02
+
+    def test_thm8_threshold_implies_small_tail(self):
+        k, delta, alpha = 100, 0.3, 1
+        s_star = T.thm8_s_threshold(k, delta, alpha)
+        # the smallest admissible FRC s above the threshold (s | k)
+        s = next(x for x in range(math.ceil(s_star), k) if k % x == 0)
+        r = int((1 - delta) * k)
+        assert T.thm7_tail_frc(k, s, r, alpha) <= 1 / k + 1e-12
+
+    def test_cor9_zero_error_probability(self):
+        k, delta = 100, 0.2
+        s_star = T.cor9_s_zero_error(k, delta)
+        s = next(x for x in range(math.ceil(s_star), k) if k % x == 0)
+        r = int((1 - delta) * k)
+        rng = RNG(5)
+        code = C.frc(k=k, n=k, s=s)
+        fails = 0
+        trials = 1000
+        for _ in range(trials):
+            mask = S.sample_straggler_mask(k, k - r, rng)
+            if D.err(code.G[:, mask]) > 1e-9:
+                fails += 1
+        assert fails / trials <= 1 / k + 0.01
+
+
+class TestLemma4:
+    def test_gram_expectations(self):
+        k, s = 60, 6
+        rng = RNG(9)
+        code = C.frc(k=k, n=k, s=s)
+        diag_exp, off_exp = T.lemma4_expected_gram_frc(k, s)
+        trials = 4000
+        acc_d = acc_o = 0.0
+        for _ in range(trials):
+            cols = rng.choice(k, size=2, replace=False)
+            a_i, a_j = code.G[:, cols[0]], code.G[:, cols[1]]
+            acc_d += a_i @ a_i
+            acc_o += a_i @ a_j
+        assert acc_d / trials == pytest.approx(diag_exp, rel=1e-9)
+        assert acc_o / trials == pytest.approx(off_exp, rel=0.25, abs=0.05)
+
+
+class TestBGCTheory:
+    def test_exact_expected_err1(self):
+        k, s, delta = 100, 10, 0.3
+        r = int((1 - delta) * k)
+        rng = RNG(11)
+        trials = 1500
+        acc = 0.0
+        for _ in range(trials):
+            code = C.bgc(k=k, n=k, s=s, rng=rng)
+            mask = S.sample_straggler_mask(k, k - r, rng)
+            acc += D.err1(code.G[:, mask], D.default_rho(k, r, s))
+        mc = acc / trials
+        expected = T.expected_err1_bgc_exact(k, s, r)
+        assert mc == pytest.approx(expected, rel=0.06)
+
+    def test_thm21_bound_shape(self):
+        """Calibrate C from one (k, s) and check the k/((1-d)s) scaling
+        predicts other settings within a constant factor."""
+        rng = RNG(13)
+
+        def mc(k, s, delta, trials=400):
+            r = int((1 - delta) * k)
+            acc = 0.0
+            for _ in range(trials):
+                code = C.bgc(k=k, n=k, s=s, rng=rng)
+                mask = S.sample_straggler_mask(k, k - r, rng)
+                acc += D.err1(code.G[:, mask], D.default_rho(k, r, s))
+            return acc / trials
+
+        base = mc(100, 8, 0.2)
+        c2 = base * (1 - 0.2) * 8 / 100  # implied C^2
+        for (k, s, delta) in [(200, 8, 0.2), (100, 16, 0.2), (100, 8, 0.5)]:
+            pred = T.thm21_bgc_err1_bound(k, s, delta, c=np.sqrt(c2))
+            got = mc(k, s, delta)
+            assert got <= 3.0 * pred  # bound within small constant factor
+            assert got >= pred / 3.0  # and the scaling is tight-ish
+
+
+class TestRBGC:
+    def test_thm24_applies_below_log_k(self):
+        """rBGC keeps err_1 = O(k/((1-delta) s)) even for s < log k, where
+        the unregularized BGC concentration can fail."""
+        k, s, delta = 256, 2, 0.2  # log k ~ 5.5 > s
+        r = int((1 - delta) * k)
+        rng = RNG(17)
+        trials = 400
+        acc = 0.0
+        for _ in range(trials):
+            code = C.rbgc(k=k, n=k, s=s, rng=rng)
+            mask = S.sample_straggler_mask(k, k - r, rng)
+            acc += D.err1(code.G[:, mask], D.default_rho(k, r, s))
+        mc = acc / trials
+        # Thm 24 with a modest constant; the point is O(k/s) not O(k)
+        assert mc <= 6.0 * k / ((1 - delta) * s)
+
+
+class TestExpanderBaseline:
+    def test_thm3_bound_holds_for_random_regular(self):
+        k, s, delta = 100, 10, 0.3
+        r = int((1 - delta) * k)
+        rng = RNG(19)
+        code = C.sregular(k=k, n=k, s=s, rng=rng)
+        lam = C.spectral_gap(code)
+        bound = T.thm3_expander_err1_bound(k, s, delta, lam)
+        worst = 0.0
+        for _ in range(300):
+            mask = S.sample_straggler_mask(k, k - r, rng)
+            worst = max(worst, D.err1(code.G[:, mask], D.default_rho(k, r, s)))
+        assert worst <= bound + 1e-6
