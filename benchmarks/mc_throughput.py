@@ -1,0 +1,153 @@
+"""E10: Monte-Carlo decode throughput — per-trial Python loop vs the
+batched DecodeEngine (the tentpole claim of the batched decode stack).
+
+Measures, at the paper-scale cell k = n = 256 with 1000 trials:
+
+  * loop      : the pre-engine path — one `G[:, mask]` slice + scalar
+                decode per trial (exactly what core.simulate used to do)
+  * batched   : all masks sampled up front, one DecodeEngine
+                `decode_batch` per cell
+
+for the one-step decoder (acceptance: batched >= 10x loop, weights
+equal to 1e-5), plus the same comparison for the algorithmic decoder
+and the batched vs looped optimal decode for context.  Emits BENCH
+json/csv artifacts under artifacts/bench/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import codes, decoding
+from repro.core.engine import DecodeEngine
+from repro.core.simulate import sample_straggler_masks
+from .common import save_csv, save_json
+
+
+def _time(fn, reps: int = 3) -> float:
+    fn()  # warmup
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _loop_onestep(G, masks, s):
+    """The old per-trial path: slice A, scalar weights + err1."""
+    k = G.shape[0]
+    B = masks.shape[0]
+    W = np.zeros((B, G.shape[1]))
+    errs = np.empty(B)
+    for b in range(B):
+        mask = masks[b]
+        A = G[:, mask]
+        r = int(mask.sum())
+        rho = decoding.default_rho(k, r, s)
+        W[b] = decoding.onestep_weights(G, mask, rho=rho)
+        errs[b] = decoding.err1(A, rho)
+    return W, errs
+
+
+def _loop_algorithmic(G, masks, iters):
+    B = masks.shape[0]
+    W = np.zeros((B, G.shape[1]))
+    errs = np.empty(B)
+    for b in range(B):
+        W[b] = decoding.algorithmic_weights(G, masks[b], iters=iters)
+        errs[b] = decoding.algorithmic_error_curve(
+            G[:, masks[b]], iters)[-1]
+    return W, errs
+
+
+def run(k: int = 256, trials: int = 1000, delta: float = 0.3,
+        s: int = 12, iters: int = 4, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    code = codes.bgc(k=k, n=k, s=s, rng=rng)
+    masks = sample_straggler_masks(k, int(delta * k), trials, rng)
+    eng = DecodeEngine(code, iters=iters, s=s)
+
+    rows = []
+
+    # ---- one-step (the acceptance cell) ----
+    t_loop = _time(lambda: _loop_onestep(code.G, masks, s))
+    t_batch = _time(lambda: eng.decode_batch(masks, "onestep"))
+    W_loop, e_loop = _loop_onestep(code.G, masks, s)
+    res = eng.decode_batch(masks, "onestep")
+    w_dev = float(np.abs(res.weights - W_loop).max())
+    e_dev = float(np.abs(res.errors - e_loop).max())
+    rows.append({
+        "decoder": "onestep", "k": k, "trials": trials, "delta": delta,
+        "loop_s": t_loop, "batched_s": t_batch,
+        "speedup": t_loop / max(t_batch, 1e-12),
+        "trials_per_s_batched": trials / max(t_batch, 1e-12),
+        "max_weight_dev": w_dev, "max_err_dev": e_dev,
+    })
+
+    # ---- algorithmic (dial midpoint) ----
+    t_loop_a = _time(lambda: _loop_algorithmic(code.G, masks, iters), reps=1)
+    t_batch_a = _time(
+        lambda: eng.decode_batch(masks, "algorithmic", iters=iters), reps=1)
+    W_la, _ = _loop_algorithmic(code.G, masks, iters)
+    res_a = eng.decode_batch(masks, "algorithmic", iters=iters)
+    rows.append({
+        "decoder": f"algorithmic{iters}", "k": k, "trials": trials,
+        "delta": delta, "loop_s": t_loop_a, "batched_s": t_batch_a,
+        "speedup": t_loop_a / max(t_batch_a, 1e-12),
+        "trials_per_s_batched": trials / max(t_batch_a, 1e-12),
+        "max_weight_dev": float(np.abs(res_a.weights - W_la).max()),
+        "max_err_dev": float("nan"),
+    })
+
+    # ---- optimal (context: the expensive baseline) ----
+    sub = masks[: max(trials // 10, 10)]
+    t_loop_o = _time(lambda: np.stack(
+        [decoding.optimal_weights(code.G, m) for m in sub]), reps=1)
+    t_batch_o = _time(lambda: eng.decode_batch(sub, "optimal"), reps=1)
+    rows.append({
+        "decoder": "optimal", "k": k, "trials": len(sub), "delta": delta,
+        "loop_s": t_loop_o, "batched_s": t_batch_o,
+        "speedup": t_loop_o / max(t_batch_o, 1e-12),
+        "trials_per_s_batched": len(sub) / max(t_batch_o, 1e-12),
+        "max_weight_dev": float(np.abs(
+            eng.decode_batch(sub, "optimal").weights
+            - np.stack([decoding.optimal_weights(code.G, m)
+                        for m in sub])).max()),
+        "max_err_dev": float("nan"),
+    })
+
+    checks = {
+        "onestep_speedup_ge_10x": bool(rows[0]["speedup"] >= 10.0),
+        "onestep_weights_match_1e-5": bool(rows[0]["max_weight_dev"] <= 1e-5),
+        "algorithmic_weights_match_1e-5": bool(
+            rows[1]["max_weight_dev"] <= 1e-5),
+    }
+    save_csv("mc_throughput", rows)
+    save_json("mc_throughput", {"rows": rows, "checks": checks})
+    return {"rows": rows, "checks": checks}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, default=256)
+    ap.add_argument("--trials", type=int, default=1000)
+    ap.add_argument("--delta", type=float, default=0.3)
+    ap.add_argument("--iters", type=int, default=4)
+    args = ap.parse_args(argv)
+    rep = run(k=args.k, trials=args.trials, delta=args.delta,
+              iters=args.iters)
+    for r in rep["rows"]:
+        print({k: (f"{v:.3g}" if isinstance(v, float) else v)
+               for k, v in r.items()})
+    ok = all(rep["checks"].values())
+    print("mc throughput checks:", rep["checks"])
+    print("PASS" if ok else "MISMATCH")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

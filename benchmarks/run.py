@@ -10,6 +10,7 @@ Runs, in order (E-numbers from DESIGN.md Sec. 4):
     E7     e2e_convergence   coded LM training vs baselines + wall-clock
     E8     decoding_cost     decoder microbenchmarks vs k
     E9     roofline_report   roofline table from the dry-run artifacts
+    E10    mc_throughput     looped vs batched Monte-Carlo decode
 
 Artifacts land in artifacts/bench/ (+ artifacts/roofline.{json,md});
 each module prints PASS/MISMATCH against the paper's claims.
@@ -37,7 +38,7 @@ def main(argv=None) -> int:
 
     from . import adversary_bench, decoding_cost, e2e_convergence, \
         fig5_algorithmic, fig_errors, theory_check
-    from . import roofline_report
+    from . import mc_throughput, roofline_report
 
     jobs = [
         ("fig_errors", lambda: fig_errors.main(["--trials", str(trials)])),
@@ -49,6 +50,8 @@ def main(argv=None) -> int:
         ("e2e_convergence",
          lambda: e2e_convergence.main(["--steps", str(steps)])),
         ("decoding_cost", lambda: decoding_cost.main([])),
+        ("mc_throughput",
+         lambda: mc_throughput.main(["--trials", str(trials)])),
         ("roofline_report", lambda: roofline_report.main([])),
     ]
     if args.only:

@@ -33,4 +33,5 @@ from .decoding import (  # noqa: F401
     optimal_weights,
 )
 from .assignment import CodedAssignment, build_assignment  # noqa: F401
+from .engine import BatchDecode, DecodeEngine  # noqa: F401
 from . import adversary, simulate, theory  # noqa: F401

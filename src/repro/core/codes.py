@@ -18,7 +18,7 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -71,6 +71,39 @@ class GradientCode:
         if mask.shape != (self.n,):
             raise ValueError(f"mask shape {mask.shape} != ({self.n},)")
         return self.G[:, mask]
+
+    @property
+    def density(self) -> float:
+        """nnz(G) / (k n) — the paper's s/k sparsity for column-regular G."""
+        return float((self.G != 0).sum()) / max(self.k * self.n, 1)
+
+    def ell(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Row-major ELL packing of G: (col_idx [k, rmax] int32,
+        vals [k, rmax] float32), zero-padded to the max row degree.
+
+        Row i's nonzero columns sit left-justified in col_idx[i] with
+        their coefficients in vals[i]; padding entries have idx 0 and
+        val 0 so gather-and-accumulate kernels can ignore them.  The
+        decoders only ever form G @ (masked weights), so the row packing
+        is the kernel-facing view of the paper's column sparsity
+        (row degree ~ n s / k = s when n = k): a batched one-step decode
+        reads B*k*rmax mask entries instead of streaming B*k*n dense
+        zeros.  Cached after the first call (G is immutable).
+        """
+        cached = self.__dict__.get("_ell")
+        if cached is None:
+            nz = self.G != 0
+            deg = nz.sum(axis=1)
+            rmax = max(int(deg.max()) if deg.size else 0, 1)
+            idx = np.zeros((self.k, rmax), dtype=np.int32)
+            val = np.zeros((self.k, rmax), dtype=np.float32)
+            for i in range(self.k):
+                cols = np.flatnonzero(nz[i])
+                idx[i, : len(cols)] = cols
+                val[i, : len(cols)] = self.G[i, cols]
+            cached = (idx, val)
+            object.__setattr__(self, "_ell", cached)  # frozen dataclass
+        return cached
 
     def with_workers(self, n: int, rng: np.random.Generator) -> "GradientCode":
         """Rebuild the same family for a different worker count (elastic)."""

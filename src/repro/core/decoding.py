@@ -31,6 +31,14 @@ __all__ = [
     "algorithmic_error_curve",
     "decode_weights",
     "apply_weights",
+    # batched (mask-ensemble) variants — consumed by core.engine
+    "err1_batch",
+    "err_batch",
+    "onestep_weights_batch",
+    "optimal_weights_batch",
+    "algorithmic_weights_batch",
+    "algorithmic_error_curve_batch",
+    "spectral_norm_sq_batch",
 ]
 
 
@@ -173,6 +181,188 @@ def algorithmic_error_curve(A: np.ndarray, iters: int, nu: Optional[float] = Non
             u = u - (A @ (A.T @ u)) / nu
         out.append(float(u @ u))
     return np.asarray(out)
+
+
+# --------------------------------------------------------------------------
+# Batched (mask-ensemble) decoders.
+#
+# All of these take a [B, n] boolean batch of non-straggler masks and
+# return [B, n] weights (and [B] errors where noted), replacing the
+# Python trial loops in the Monte-Carlo engine.  Zero terms contribute
+# exactly 0.0 to float sums, so the masked full-width linear algebra
+# below reproduces the per-mask submatrix results exactly (onestep) or
+# to solver/BLAS rounding (optimal, algorithmic).
+# --------------------------------------------------------------------------
+
+
+def _as_masks(masks: np.ndarray, n: int) -> np.ndarray:
+    masks = np.asarray(masks, dtype=bool)
+    if masks.ndim == 1:
+        masks = masks[None]
+    if masks.ndim != 2 or masks.shape[1] != n:
+        raise ValueError(f"masks shape {masks.shape} != (B, {n})")
+    return masks
+
+
+def _infer_s(G: np.ndarray) -> int:
+    return max(1, int(round((G != 0).sum() / max(G.shape[1], 1))))
+
+
+def _default_rhos(k: int, rs: np.ndarray, s: int) -> np.ndarray:
+    """Vectorized default_rho: k/(r s), 0 where r == 0."""
+    out = np.zeros(len(rs))
+    nz = rs > 0
+    out[nz] = k / (rs[nz] * s)
+    return out
+
+
+def _batch_chunks(B: int, k: int, n: int, budget_elems: int = 1 << 26):
+    """Yield slices covering range(B), bounding k*n*chunk work arrays."""
+    step = max(1, budget_elems // max(k * n, 1))
+    for lo in range(0, B, step):
+        yield slice(lo, min(lo + step, B))
+
+
+def err1_batch(G: np.ndarray, masks: np.ndarray,
+               rhos: np.ndarray) -> np.ndarray:
+    """err_1 per mask: ||rho_b * G m_b - 1_k||^2.  Returns [B]."""
+    G = _as2d(G)
+    masks = _as_masks(masks, G.shape[1])
+    V = np.asarray(rhos)[:, None] * (masks @ G.T)
+    return ((V - 1.0) ** 2).sum(axis=1)
+
+
+def err_batch(G: np.ndarray, W: np.ndarray) -> np.ndarray:
+    """Residual ||G w_b - 1_k||^2 for given decode weights.  Returns [B]."""
+    G = _as2d(G)
+    V = W @ G.T
+    return ((V - 1.0) ** 2).sum(axis=1)
+
+
+def onestep_weights_batch(G: np.ndarray, masks: np.ndarray,
+                          rho: Optional[float] = None,
+                          s: Optional[int] = None) -> np.ndarray:
+    """Batched Algorithm 1 weights: w_b = rho_b * m_b.  Returns [B, n]."""
+    G = _as2d(G)
+    k, n = G.shape
+    masks = _as_masks(masks, n)
+    if rho is None:
+        if s is None:
+            s = _infer_s(G)
+        rhos = _default_rhos(k, masks.sum(axis=1), s)
+    else:
+        rhos = np.full(masks.shape[0], float(rho))
+    return rhos[:, None] * masks
+
+
+def optimal_weights_batch(G: np.ndarray, masks: np.ndarray,
+                          ridge: float = 0.0) -> np.ndarray:
+    """Batched Algorithm 2 weights embedded in R^n.  Returns [B, n].
+
+    ridge == 0 takes the min-norm LS solution via batched pinv of the
+    column-masked G (zeroed columns contribute zero weights, matching
+    the per-mask submatrix lstsq).  ridge > 0 solves the masked normal
+    equations (m G^T G m + ridge I) w = m G^T 1, whose off-support rows
+    reduce to ridge * w_j = 0.  Work is chunked over B to bound memory.
+    """
+    G = _as2d(G)
+    k, n = G.shape
+    masks = _as_masks(masks, n)
+    B = masks.shape[0]
+    ones = np.ones(k)
+    W = np.zeros((B, n))
+    for sl in _batch_chunks(B, k, n):
+        m = masks[sl].astype(np.float64)
+        A = G[None, :, :] * m[:, None, :]                    # [b, k, n]
+        if ridge > 0.0:
+            AtA = np.einsum("bki,bkj->bij", A, A)
+            AtA[:, np.arange(n), np.arange(n)] += ridge
+            rhs = A.transpose(0, 2, 1) @ ones
+            W[sl] = np.linalg.solve(AtA, rhs[..., None])[..., 0] \
+                * m  # exact zeros at stragglers
+        else:
+            W[sl] = (np.linalg.pinv(A) @ ones) * m
+    return W
+
+
+def spectral_norm_sq_batch(G: np.ndarray, masks: np.ndarray) -> np.ndarray:
+    """||A_b||_2^2 per mask (A_b = column-masked G).  Returns [B].
+
+    Degenerate masks (empty A) map to 1.0, matching _spectral_norm_sq.
+    """
+    G = _as2d(G)
+    k, n = G.shape
+    masks = _as_masks(masks, n)
+    out = np.ones(masks.shape[0])
+    for sl in _batch_chunks(masks.shape[0], k, n):
+        A = G[None, :, :] * masks[sl].astype(np.float64)[:, None, :]
+        sv = np.linalg.svd(A, compute_uv=False)[:, 0]
+        nz = sv > 0
+        out[sl] = np.where(nz, sv ** 2, 1.0)
+    return out
+
+
+def algorithmic_weights_batch(G: np.ndarray, masks: np.ndarray, iters: int,
+                              nu: Optional[np.ndarray] = None,
+                              return_errors: bool = False):
+    """Batched Lemma-12 weights after `iters` iterations.  Returns
+    [B, n] (and [B] final ||u_t||^2 errors when return_errors=True).
+
+    nu may be a scalar, a [B] array, or None (per-mask spectral norm,
+    matching the scalar path).
+    """
+    G = _as2d(G)
+    k, n = G.shape
+    masks = _as_masks(masks, n)
+    B = masks.shape[0]
+    W = np.zeros((B, n))
+    if iters <= 0:
+        if return_errors:
+            return W, np.full(B, float(k))
+        return W
+    if nu is None:
+        nus = spectral_norm_sq_batch(G, masks)
+    else:
+        nus = np.broadcast_to(np.asarray(nu, dtype=np.float64), (B,)).copy()
+    nus[nus <= 0] = 1.0
+    m = masks.astype(np.float64)
+    U = np.ones((B, k))
+    X = np.zeros((B, n))
+    inv = (1.0 / nus)[:, None]
+    for _ in range(iters):
+        T = (U @ G) * m                # [B, n] = A^T u, masked
+        X += T * inv
+        U = U - (T @ G.T) * inv        # u - A A^T u / nu
+    W = X * m                          # exact zeros at stragglers
+    if return_errors:
+        return W, (U ** 2).sum(axis=1)
+    return W
+
+
+def algorithmic_error_curve_batch(G: np.ndarray, masks: np.ndarray,
+                                  iters: int,
+                                  nu: Optional[np.ndarray] = None
+                                  ) -> np.ndarray:
+    """[B, iters+1] of ||u_t||^2 per mask (batched Fig.-5 curves)."""
+    G = _as2d(G)
+    k, n = G.shape
+    masks = _as_masks(masks, n)
+    B = masks.shape[0]
+    if nu is None:
+        nus = spectral_norm_sq_batch(G, masks)
+    else:
+        nus = np.broadcast_to(np.asarray(nu, dtype=np.float64), (B,)).copy()
+    nus[nus <= 0] = 1.0
+    m = masks.astype(np.float64)
+    U = np.ones((B, k))
+    inv = (1.0 / nus)[:, None]
+    out = np.empty((B, iters + 1))
+    out[:, 0] = (U ** 2).sum(axis=1)
+    for t in range(iters):
+        T = (U @ G) * m
+        U = U - (T @ G.T) * inv
+        out[:, t + 1] = (U ** 2).sum(axis=1)
+    return out
 
 
 def decode_weights(G: np.ndarray, mask: np.ndarray, method: str = "onestep",

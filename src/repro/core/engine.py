@@ -1,0 +1,245 @@
+"""DecodeEngine: the one subsystem turning straggler masks into decode
+weights, shared by the Monte-Carlo simulator, the coded training loop,
+and the benchmarks.
+
+The paper's pitch is that one-step decoding of sparse-graph codes is
+cheap enough to run everywhere; this engine makes that true *at scale*
+by decoding a whole ``[B, n]`` ensemble of masks per call instead of a
+Python loop over trials:
+
+  * ``decode_batch(masks)`` -> ``[B, n]`` weights + ``[B]`` errors for
+    the one-step (Algorithm 1), ridge/optimal (Algorithm 2) and
+    algorithmic (Lemma 12) decoders, plus the ignore-stragglers
+    baseline.
+  * backends: ``numpy`` (BLAS batched, float64 — the CPU master path),
+    ``xla`` / ``pallas`` / ``pallas_interpret`` (the batched-grid Pallas
+    kernels in kernels.batched_decode; fp32).  The Pallas one-step path
+    automatically switches to the row-ELL packing of G
+    (``GradientCode.ell()``) when the code is sparse enough that
+    gathering beats streaming dense zeros.
+  * ``decode(mask)`` -> ``[n]`` weights through a mask->weights LRU
+    cache, so regimes that repeat masks (adversarial stragglers, stable
+    deadline cohorts) decode once per distinct mask.
+
+See DESIGN.md §5 for how this slots between core.decoding (scalar
+oracles), core.simulate (mask ensembles) and training.train_loop
+(per-step decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import numpy as np
+
+from . import decoding
+from .codes import GradientCode
+
+__all__ = ["BatchDecode", "DecodeEngine"]
+
+_BACKENDS = ("numpy", "xla", "pallas", "pallas_interpret")
+DECODERS = ("onestep", "optimal", "algorithmic", "ignore")
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchDecode:
+    """Result of one batched decode: per-mask weights and errors."""
+
+    weights: np.ndarray      # [B, n] decode weights (zero at stragglers)
+    errors: np.ndarray       # [B] decoding error (err_1 / err / ||u_t||^2)
+
+    @property
+    def batch(self) -> int:
+        return int(self.weights.shape[0])
+
+
+class DecodeEngine:
+    """Owns a GradientCode and decodes mask ensembles against it.
+
+    Construction is cheap; the ELL packing and per-code constants are
+    derived lazily.  One engine per live code — the training loop
+    rebuilds it on elastic re-coding, the simulator builds one per
+    (scheme, delta) cell.
+    """
+
+    def __init__(self, code: GradientCode, *, backend: str = "numpy",
+                 rho: Optional[float] = None, s: Optional[int] = None,
+                 ridge: float = 0.0, iters: int = 8, sparse: str = "auto",
+                 cache_size: int = 512):
+        if backend not in _BACKENDS:
+            raise ValueError(f"backend {backend!r} not in {_BACKENDS}")
+        if sparse not in ("auto", "always", "never"):
+            raise ValueError(f"sparse {sparse!r}")
+        self.code = code
+        self.backend = backend
+        self.rho = rho                  # None -> per-mask k/(r s)
+        self.ridge = ridge
+        self.iters = iters
+        self.sparse = sparse
+        # s in rho = k/(r s): the caller's nominal tasks/worker when
+        # given (the paper's calibration — simulate passes it), else
+        # inferred from G's density exactly like decoding.onestep_weights
+        self._s = s if s is not None else decoding._infer_s(code.G)
+        self._cache: OrderedDict = OrderedDict()
+        self._cache_size = cache_size
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+
+    @property
+    def k(self) -> int:
+        return self.code.k
+
+    @property
+    def n(self) -> int:
+        return self.code.n
+
+    def rhos_for(self, masks: np.ndarray) -> np.ndarray:
+        """Per-mask one-step scaling: the fixed rho, or k/(r_b s)."""
+        masks = decoding._as_masks(masks, self.n)
+        if self.rho is not None:
+            return np.full(masks.shape[0], float(self.rho))
+        return decoding._default_rhos(self.k, masks.sum(axis=1), self._s)
+
+    def _use_ell(self) -> bool:
+        if self.sparse == "never":
+            return False
+        idx, _ = self.code.ell()
+        rmax = idx.shape[1]
+        # gather wins when the packed row is meaningfully narrower than
+        # the dense worker dimension
+        return self.sparse == "always" or 4 * rmax <= self.n
+
+    # ------------------------------------------------------------------
+    # batched decode
+    # ------------------------------------------------------------------
+
+    def decode_batch(self, masks: np.ndarray, method: str = "onestep", *,
+                     iters: Optional[int] = None) -> BatchDecode:
+        """Decode a [B, n] mask ensemble -> weights [B, n], errors [B]."""
+        masks = decoding._as_masks(masks, self.n)
+        if method == "onestep":
+            return self._onestep_batch(masks)
+        if method == "optimal":
+            return self._optimal_batch(masks)
+        if method == "algorithmic":
+            return self._algorithmic_batch(
+                masks, self.iters if iters is None else iters)
+        if method == "ignore":
+            return self._ignore_batch(masks)
+        raise ValueError(f"unknown decode method {method!r}; "
+                         f"have {DECODERS}")
+
+    def errors_batch(self, masks: np.ndarray, method: str = "onestep", *,
+                     iters: Optional[int] = None) -> np.ndarray:
+        """[B] decoding errors only (what the Monte-Carlo cells consume)."""
+        return self.decode_batch(masks, method, iters=iters).errors
+
+    def _onestep_batch(self, masks: np.ndarray) -> BatchDecode:
+        G = self.code.G
+        rhos = self.rhos_for(masks)
+        W = rhos[:, None] * masks
+        if self.backend == "numpy":
+            errs = decoding.err1_batch(G, masks, rhos)
+            return BatchDecode(weights=W, errors=errs)
+        V = self._kernel_onestep(masks, rhos)
+        errs = ((V - 1.0) ** 2).sum(axis=1)
+        return BatchDecode(weights=W, errors=errs)
+
+    def _kernel_onestep(self, masks: np.ndarray,
+                        rhos: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from ..kernels import ops
+        m = jnp.asarray(masks)
+        r = jnp.asarray(rhos.astype(np.float32))
+        if self._use_ell():
+            idx, val = self.code.ell()
+            V = ops.batched_onestep_decode_ell(
+                jnp.asarray(idx), jnp.asarray(val), m, r,
+                impl=self.backend)
+        else:
+            V = ops.batched_onestep_decode(
+                jnp.asarray(self.code.G.astype(np.float32)), m, r,
+                impl=self.backend)
+        return np.asarray(V, dtype=np.float64)
+
+    def _optimal_batch(self, masks: np.ndarray) -> BatchDecode:
+        # least-squares has no Pallas path; every backend lands on the
+        # batched numpy solver (the paper's point: optimal decode IS the
+        # expensive baseline)
+        G = self.code.G
+        W = decoding.optimal_weights_batch(G, masks, ridge=self.ridge)
+        errs = decoding.err_batch(G, W)
+        return BatchDecode(weights=W, errors=errs)
+
+    def _algorithmic_batch(self, masks: np.ndarray,
+                           iters: int) -> BatchDecode:
+        G = self.code.G
+        if self.backend == "numpy":
+            W, errs = decoding.algorithmic_weights_batch(
+                G, masks, iters, return_errors=True)
+            return BatchDecode(weights=W, errors=errs)
+        import jax.numpy as jnp
+
+        from ..kernels import ops
+        nus = decoding.spectral_norm_sq_batch(G, masks)
+        U, X = ops.batched_algorithmic_decode(
+            jnp.asarray(G.astype(np.float32)), jnp.asarray(masks),
+            jnp.asarray(nus.astype(np.float32)), int(iters),
+            impl=self.backend, return_weights=True)
+        W = np.asarray(X, dtype=np.float64) * masks
+        errs = (np.asarray(U, dtype=np.float64) ** 2).sum(axis=1)
+        return BatchDecode(weights=W, errors=errs)
+
+    def _ignore_batch(self, masks: np.ndarray) -> BatchDecode:
+        G = self.code.G
+        colnnz = (G != 0).sum(axis=0).astype(np.float64)
+        cover = np.maximum(masks @ colnnz, 1.0)
+        W = masks * (self.k / cover)[:, None]
+        errs = decoding.err_batch(G, W)
+        return BatchDecode(weights=W, errors=errs)
+
+    # ------------------------------------------------------------------
+    # single-mask decode with LRU cache (training hot path)
+    # ------------------------------------------------------------------
+
+    def decode(self, mask: np.ndarray, method: str = "onestep", *,
+               iters: Optional[int] = None) -> np.ndarray:
+        """[n] decode weights for one mask, memoized on the mask bytes.
+
+        Adversarial and deadline straggler regimes repeat masks across
+        steps; each distinct (mask, method) decodes exactly once.
+        """
+        mask = np.asarray(mask, dtype=bool)
+        it = self.iters if iters is None else iters
+        key = (method, it, mask.tobytes())
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.cache_hits += 1
+            self._cache.move_to_end(key)
+            return hit
+        self.cache_misses += 1
+        w = self.decode_batch(mask[None], method, iters=it).weights[0]
+        w.setflags(write=False)   # cached array is shared — freeze it
+        self._cache[key] = w
+        if len(self._cache) > self._cache_size:
+            self._cache.popitem(last=False)
+        return w
+
+    def cache_info(self) -> dict:
+        return {"hits": self.cache_hits, "misses": self.cache_misses,
+                "size": len(self._cache), "maxsize": self._cache_size}
+
+    def clear_cache(self) -> None:
+        self._cache.clear()
+        self.cache_hits = self.cache_misses = 0
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"DecodeEngine(code={self.code.name!r}, k={self.k}, "
+                f"n={self.n}, backend={self.backend!r})")

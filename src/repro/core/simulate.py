@@ -2,6 +2,14 @@
 
 Reproduces the quantities in Figs. 2-5: average err_1(A)/k and err(A)/k
 over random straggler draws, and the algorithmic-decoder curve ||u_t||^2/k.
+
+Batched architecture: each (scheme, delta, decoder) cell samples ALL of
+its trial masks up front (`sample_straggler_masks`) and hands them to a
+DecodeEngine as one [trials, n] ensemble — one batched decode per cell
+instead of a Python loop over trials.  Schemes with code randomness
+(bgc / rbgc / sregular) additionally average over `code_draws`
+independent code draws, splitting the trials across them (one batched
+decode per draw); deterministic schemes use a single draw.
 """
 
 from __future__ import annotations
@@ -13,14 +21,21 @@ import numpy as np
 
 from . import codes as codes_lib
 from . import decoding
+from .engine import DecodeEngine
 
 __all__ = [
     "sample_straggler_mask",
+    "sample_straggler_masks",
     "MCResult",
     "monte_carlo_error",
     "sweep_delta",
     "algorithmic_curve_mc",
+    "RESAMPLED_SCHEMES",
 ]
+
+# schemes whose construction is random: the paper averages over code AND
+# straggler randomness for these
+RESAMPLED_SCHEMES = ("bgc", "rbgc", "sregular")
 
 
 def sample_straggler_mask(n: int, num_stragglers: int, rng: np.random.Generator
@@ -30,6 +45,23 @@ def sample_straggler_mask(n: int, num_stragglers: int, rng: np.random.Generator
     if num_stragglers > 0:
         mask[rng.choice(n, size=num_stragglers, replace=False)] = False
     return mask
+
+
+def sample_straggler_masks(n: int, num_stragglers: int, trials: int,
+                           rng: np.random.Generator) -> np.ndarray:
+    """[trials, n] boolean keep-masks, each an independent uniform
+    without-replacement draw of `num_stragglers` stragglers.
+
+    Vectorized: rank one uniform matrix per trial instead of `trials`
+    calls to rng.choice.
+    """
+    masks = np.ones((trials, n), dtype=bool)
+    if num_stragglers <= 0:
+        return masks
+    u = rng.random((trials, n))
+    idx = np.argpartition(u, num_stragglers - 1, axis=1)[:, :num_stragglers]
+    masks[np.arange(trials)[:, None], idx] = False
+    return masks
 
 
 @dataclasses.dataclass
@@ -48,18 +80,11 @@ class MCResult:
     p_zero: float  # fraction of trials with (near-)zero error
 
 
-def _one_trial_error(G: np.ndarray, mask: np.ndarray, decoder: str, s: int,
-                     iters: int = 8) -> float:
-    k = G.shape[0]
-    A = G[:, mask]
-    r = int(mask.sum())
-    if decoder == "onestep":
-        return decoding.err1(A, decoding.default_rho(k, r, s))
-    if decoder == "optimal":
-        return decoding.err(A)
-    if decoder == "algorithmic":
-        return float(decoding.algorithmic_error_curve(A, iters)[-1])
-    raise ValueError(decoder)
+def _trial_groups(trials: int, groups: int) -> List[int]:
+    """Split `trials` into `groups` near-equal positive chunk sizes."""
+    groups = max(1, min(groups, trials))
+    base, rem = divmod(trials, groups)
+    return [base + (1 if g < rem else 0) for g in range(groups)]
 
 
 def monte_carlo_error(
@@ -73,22 +98,30 @@ def monte_carlo_error(
     seed: int = 0,
     resample_code: bool = True,
     iters: int = 8,
+    code_draws: int = 16,
+    backend: str = "numpy",
 ) -> MCResult:
     """Average decoding error over `trials` random straggler draws.
 
-    resample_code=True redraws the (random) code each trial, matching the
-    paper's averaging over both code and straggler randomness; FRC/cyclic
-    are deterministic so this only matters for bgc/rbgc/sregular.
+    resample_code=True averages over the code randomness as well
+    (matching the paper): `code_draws` independent codes are drawn and
+    the trials are split across them, so the decode stays batched.
+    FRC/cyclic/uncoded are deterministic and always use a single code.
     """
     rng = np.random.default_rng(seed)
     num_straggle = int(round(delta * n))
-    code = codes_lib.make_code(scheme, k=k, n=n, s=s, rng=rng)
+    draws = code_draws if (resample_code and scheme in RESAMPLED_SCHEMES) \
+        else 1
     errs = np.empty(trials)
-    for t in range(trials):
-        if resample_code and scheme in ("bgc", "rbgc", "sregular"):
-            code = codes_lib.make_code(scheme, k=k, n=n, s=s, rng=rng)
-        mask = sample_straggler_mask(n, num_straggle, rng)
-        errs[t] = _one_trial_error(code.G, mask, decoder, s, iters=iters)
+    lo = 0
+    for chunk in _trial_groups(trials, draws):
+        code = codes_lib.make_code(scheme, k=k, n=n, s=s, rng=rng)
+        masks = sample_straggler_masks(n, num_straggle, chunk, rng)
+        # nominal s, NOT inferred from G's density: the paper's
+        # rho = k/(r s) calibration uses the construction parameter
+        eng = DecodeEngine(code, backend=backend, iters=iters, s=s)
+        errs[lo: lo + chunk] = eng.errors_batch(masks, decoder)
+        lo += chunk
     errs = errs / k
     return MCResult(
         scheme=scheme, decoder=decoder, k=k, n=n, s=s, delta=delta,
@@ -106,13 +139,14 @@ def sweep_delta(
     trials: int,
     decoder: str = "onestep",
     seed: int = 0,
+    backend: str = "numpy",
 ) -> List[MCResult]:
     out: List[MCResult] = []
     for scheme in schemes:
         for d in deltas:
             out.append(monte_carlo_error(scheme, k=k, n=k, s=s, delta=d,
                                          trials=trials, decoder=decoder,
-                                         seed=seed))
+                                         seed=seed, backend=backend))
     return out
 
 
@@ -124,13 +158,16 @@ def algorithmic_curve_mc(
     trials: int,
     iters: int,
     seed: int = 0,
+    code_draws: int = 16,
 ) -> np.ndarray:
-    """Mean ||u_t||^2/k curve, t = 0..iters (Fig. 5)."""
+    """Mean ||u_t||^2/k curve, t = 0..iters (Fig. 5), batched per draw."""
     rng = np.random.default_rng(seed)
     num_straggle = int(round(delta * k))
+    draws = code_draws if scheme in RESAMPLED_SCHEMES else 1
     acc = np.zeros(iters + 1)
-    for _ in range(trials):
+    for chunk in _trial_groups(trials, draws):
         code = codes_lib.make_code(scheme, k=k, n=k, s=s, rng=rng)
-        mask = sample_straggler_mask(k, num_straggle, rng)
-        acc += decoding.algorithmic_error_curve(code.G[:, mask], iters)
+        masks = sample_straggler_masks(k, num_straggle, chunk, rng)
+        curves = decoding.algorithmic_error_curve_batch(code.G, masks, iters)
+        acc += curves.sum(axis=0)
     return acc / (trials * k)

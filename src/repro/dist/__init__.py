@@ -1,0 +1,32 @@
+"""Distribution layer: logical-axis sharding rules, mesh context, and
+activation constraints.
+
+Everything the models / optimizer / launchers need to be mesh-agnostic:
+parameters and activations name *logical* axes ("vocab", "mlp", "batch",
+...) and `repro.dist.sharding` resolves them against the active mesh and
+rule set, with divisibility-checked fallbacks.
+"""
+
+from .sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    constrain,
+    logical_to_pspec,
+    param_pspec,
+    param_shardings,
+    rules_for,
+    use_mesh,
+    use_rules,
+)
+from . import sharding  # noqa: F401
+
+__all__ = [
+    "DEFAULT_RULES",
+    "constrain",
+    "logical_to_pspec",
+    "param_pspec",
+    "param_shardings",
+    "rules_for",
+    "use_mesh",
+    "use_rules",
+    "sharding",
+]

@@ -1,0 +1,247 @@
+"""Logical-axis sharding: rules, resolution, and the mesh/rules context.
+
+The models annotate every parameter dimension and key activation with a
+*logical* axis name (see models.spec.ParamSpec.axes and
+models.*.constrain calls).  This module is the single place those names
+meet physical mesh axes:
+
+  * ``DEFAULT_RULES`` maps each logical name to an ordered list of
+    candidate mesh-axis assignments (a candidate is a tuple of mesh axis
+    names, e.g. ``("pod", "data")`` for the batch dimension).
+  * ``logical_to_pspec`` resolves an axes-tuple against a mesh: the
+    first candidate whose mesh axes all exist, are not already used by
+    another dimension of the same tensor, and whose combined size
+    divides the dimension wins; otherwise the dimension is replicated.
+    Divisibility fallback is what lets one rule set serve the 512-chip
+    production mesh and the 8-device CPU debug mesh.
+  * ``use_mesh`` / ``use_rules`` install the active mesh / rule set for
+    a region (trace-time context: wrap the jit/lower call).
+  * ``constrain`` applies a logical-axes sharding constraint to an
+    activation inside a traced function; it is the identity when no
+    mesh is active, so the same model code runs single-device.
+  * ``param_pspec`` / ``param_shardings`` add the FSDP option: shard a
+    still-replicated (non-"layers") parameter dimension over 'data'.
+
+Per-arch overrides come from ``rules_for(cfg)``: the only current
+override is ``batch_shard_model`` (attn-free archs can treat the
+'model' axis as extra data parallelism).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DEFAULT_RULES",
+    "active_mesh",
+    "active_rules",
+    "constrain",
+    "logical_to_pspec",
+    "param_pspec",
+    "param_shardings",
+    "rules_for",
+    "use_mesh",
+    "use_rules",
+]
+
+# Candidate lists are ordered best-first; each candidate is a tuple of
+# mesh axis names sharding that one dimension jointly.  Names absent
+# from the mapping (or mapped to an empty tuple) are replicated.
+Rules = Dict[str, Tuple[Tuple[str, ...], ...]]
+
+DEFAULT_RULES: Rules = {
+    # -------- data dims (activations / batch) --------
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (),
+    "seq_shard": (),
+    # -------- parameter dims --------
+    "vocab": (("model",),),
+    "embed": (),          # d_model stays replicated; TP slices heads/mlp
+    "mlp": (("model",),),
+    "heads": (("model",),),
+    "kv": (("model",),),
+    "experts": (("model",),),
+    "rnn": (("model",),),
+    "conv": (),
+    "layers": (),         # scan dim: must stay replicated
+    # -------- activation-only dims --------
+    "act_heads": (("model",),),
+    "act_kv": (("model",),),
+    "act_mlp": (("model",),),
+    "act_experts": (("model",),),
+}
+
+# batch_shard_model: the 'model' axis joins data parallelism (attn-free
+# archs whose head reshapes can't use TP — rwkv6).  Falls back through
+# progressively narrower assignments on divisibility.
+_BATCH_SHARD_MODEL_RULES: Rules = dict(
+    DEFAULT_RULES,
+    batch=(("pod", "data", "model"), ("data", "model"), ("data",)),
+)
+
+
+def rules_for(cfg) -> Rules:
+    """Rule set for an architecture config (identity: DEFAULT_RULES
+    unless the config carries a distribution override)."""
+    if getattr(cfg, "batch_shard_model", False):
+        return _BATCH_SHARD_MODEL_RULES
+    return DEFAULT_RULES
+
+
+# --------------------------------------------------------------------------
+# active mesh / rules context
+# --------------------------------------------------------------------------
+
+_ACTIVE: Dict[str, Any] = {"mesh": None, "rules": DEFAULT_RULES}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Install `mesh` as the active mesh (None = single-device no-op)."""
+    prev = _ACTIVE["mesh"]
+    _ACTIVE["mesh"] = mesh
+    try:
+        yield mesh
+    finally:
+        _ACTIVE["mesh"] = prev
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    """Install a rule set (None keeps the current one)."""
+    prev = _ACTIVE["rules"]
+    _ACTIVE["rules"] = prev if rules is None else rules
+    try:
+        yield _ACTIVE["rules"]
+    finally:
+        _ACTIVE["rules"] = prev
+
+
+def active_mesh():
+    return _ACTIVE["mesh"]
+
+
+def active_rules() -> Rules:
+    return _ACTIVE["rules"]
+
+
+# --------------------------------------------------------------------------
+# resolution
+# --------------------------------------------------------------------------
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _norm_candidate(cand) -> Tuple[str, ...]:
+    return (cand,) if isinstance(cand, str) else tuple(cand)
+
+
+def _resolve_dim(name: Optional[str], dim: int, sizes: Dict[str, int],
+                 used: set, rules: Rules):
+    """PartitionSpec entry for one dimension (None = replicated)."""
+    if name is None:
+        return None
+    for cand in rules.get(name, ()):
+        cand = _norm_candidate(cand)
+        if not cand:
+            return None
+        if any(a not in sizes or a in used for a in cand):
+            continue
+        span = math.prod(sizes[a] for a in cand)
+        if span <= 1 or dim % span != 0:
+            continue
+        used.update(cand)
+        return cand[0] if len(cand) == 1 else cand
+    return None
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]],
+                     shape: Sequence[int],
+                     mesh=None,
+                     rules: Optional[Rules] = None) -> P:
+    """Resolve a logical-axes tuple to a PartitionSpec for `mesh`.
+
+    Mesh / rules default to the active context.  Each dimension takes
+    the first rule candidate that (a) names only axes present in the
+    mesh, (b) does not reuse a mesh axis already claimed by an earlier
+    dimension of this tensor, and (c) evenly divides the dimension.
+    """
+    mesh = active_mesh() if mesh is None else mesh
+    rules = active_rules() if rules is None else rules
+    if mesh is None:
+        return P()
+    sizes = _axis_sizes(mesh)
+    used: set = set()
+    entries = [_resolve_dim(name, dim, sizes, used, rules)
+               for name, dim in zip(axes, shape)]
+    return P(*entries)
+
+
+def param_pspec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                mesh=None, *, fsdp: bool = False,
+                rules: Optional[Rules] = None) -> P:
+    """PartitionSpec for one parameter; optionally FSDP over 'data'.
+
+    FSDP shards the first still-replicated dimension that divides the
+    'data' axis — preferring dimensions that are NOT the 'layers' scan
+    dimension (slicing the scan dim would break lax.scan carry layout).
+    """
+    mesh = active_mesh() if mesh is None else mesh
+    if mesh is None:
+        return P()
+    spec = list(logical_to_pspec(axes, shape, mesh, rules=rules))
+    spec += [None] * (len(shape) - len(spec))
+    if fsdp:
+        sizes = _axis_sizes(mesh)
+        data = sizes.get("data", 1)
+        taken = {a for e in spec if e is not None
+                 for a in (_norm_candidate(e))}
+        if data > 1 and "data" not in taken:
+            names = list(axes) + [None] * (len(shape) - len(axes))
+            for i, (entry, name, dim) in enumerate(zip(spec, names, shape)):
+                if entry is None and name != "layers" and dim % data == 0:
+                    spec[i] = "data"
+                    break
+    return P(*spec)
+
+
+def _is_axes(t) -> bool:
+    return isinstance(t, tuple) and all(
+        isinstance(e, (str, type(None))) for e in t)
+
+
+def param_shardings(param_axes, params, mesh=None, *, fsdp: bool = False,
+                    rules: Optional[Rules] = None):
+    """NamedSharding tree for a parameter tree (abstract or concrete)."""
+    mesh = active_mesh() if mesh is None else mesh
+
+    def one(axes, aval):
+        return NamedSharding(
+            mesh, param_pspec(axes, aval.shape, mesh, fsdp=fsdp, rules=rules))
+
+    return jax.tree_util.tree_map(one, param_axes, params, is_leaf=_is_axes)
+
+
+# --------------------------------------------------------------------------
+# activation constraints
+# --------------------------------------------------------------------------
+
+def constrain(x, *axes: Optional[str]):
+    """Sharding-constrain an activation by logical axis names.
+
+    Identity when no mesh is active (single-device tests / CPU smoke)
+    or when no logical name resolves against the active mesh.
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(axes, x.shape, mesh)
+    if all(e is None for e in tuple(spec) + (None,) * (x.ndim - len(spec))):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

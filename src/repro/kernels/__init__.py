@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the framework's compute hot spots.
 
-Six kernels, each `pl.pallas_call` + explicit BlockSpec VMEM tiling,
+Each kernel is `pl.pallas_call` + explicit BlockSpec VMEM tiling,
 validated in interpret mode against the pure-jnp oracles in ref.py:
 
     flash_attention     32k-prefill attention (online softmax, block skip)
@@ -9,6 +9,9 @@ validated in interpret mode against the pure-jnp oracles in ref.py:
     coded_accumulate    worker-side sum_i G[i,j] g_i / master-side decode
     onestep_decode      Algorithm 1: v = rho * A 1_r (streaming row-sum)
     algorithmic_decode  Lemma 12 iterates u_t (decode accuracy/cost dial)
+    batched_decode      the batched-grid variants of the two decoders
+                        (one launch per [B, n] mask ensemble, dense and
+                        row-ELL sparse) powering core.engine.DecodeEngine
 
 Use via repro.kernels.ops with impl in {"xla", "pallas",
 "pallas_interpret"}.
@@ -17,6 +20,11 @@ Use via repro.kernels.ops with impl in {"xla", "pallas",
 from . import ops  # noqa: F401
 from . import ref  # noqa: F401
 from .algorithmic_decode import algorithmic_decode, algorithmic_iterate  # noqa: F401
+from .batched_decode import (  # noqa: F401
+    batched_algorithmic_decode,
+    batched_onestep_decode,
+    batched_onestep_decode_ell,
+)
 from .coded_accumulate import coded_accumulate  # noqa: F401
 from .flash_attention import flash_attention  # noqa: F401
 from .onestep_decode import onestep_decode  # noqa: F401

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 __all__ = ["algorithmic_decode", "algorithmic_iterate"]
 
 
@@ -90,7 +92,7 @@ def algorithmic_iterate(G, mask, u, nu, *, bk=512, bn=512, interpret=False):
         out_specs=pl.BlockSpec((1, bn), lambda jj, ii: (0, jj)),
         out_shape=jax.ShapeDtypeStruct((1, nn * bn), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(g, m, up)
@@ -106,7 +108,7 @@ def algorithmic_iterate(G, mask, u, nu, *, bk=512, bn=512, interpret=False):
         out_specs=pl.BlockSpec((bk, 1), lambda ii, jj: (ii, 0)),
         out_shape=jax.ShapeDtypeStruct((nk * bk, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bk, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(g, t, up)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 __all__ = ["coded_accumulate"]
 
 
@@ -59,7 +61,7 @@ def coded_accumulate(
         ],
         out_specs=pl.BlockSpec((1, bp), lambda p: (0, p)),
         out_shape=jax.ShapeDtypeStruct((1, np_ * bp), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(w, g)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 __all__ = ["flash_attention"]
 
 _NEG_INF = -1e30
@@ -157,7 +159,7 @@ def flash_attention(
             pltpu.VMEM((bq, 1), jnp.float32),     # denominator l
             pltpu.VMEM((bq, dh), jnp.float32),    # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

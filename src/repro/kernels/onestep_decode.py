@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 __all__ = ["onestep_decode"]
 
 
@@ -74,7 +76,7 @@ def onestep_decode(
         out_specs=pl.BlockSpec((bk, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nk * bk, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bk, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(g, m)

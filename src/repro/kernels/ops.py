@@ -18,6 +18,11 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .algorithmic_decode import algorithmic_decode as _algorithmic_pallas
+from .batched_decode import (
+    batched_algorithmic_decode as _batched_algorithmic_pallas,
+    batched_onestep_decode as _batched_onestep_pallas,
+    batched_onestep_decode_ell as _batched_onestep_ell_pallas,
+)
 from .coded_accumulate import coded_accumulate as _accumulate_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .onestep_decode import onestep_decode as _onestep_pallas
@@ -27,6 +32,8 @@ from .rwkv6_wkv import rwkv6_wkv as _wkv_pallas
 __all__ = [
     "attention", "rglru_scan", "rwkv6_wkv",
     "coded_accumulate", "onestep_decode", "algorithmic_decode",
+    "batched_onestep_decode", "batched_onestep_decode_ell",
+    "batched_algorithmic_decode",
 ]
 
 
@@ -77,3 +84,49 @@ def algorithmic_decode(G, mask, nu, iters, *, impl="pallas", bk=512, bn=512):
         return _ref.algorithmic_decode_ref(A, float(nu), int(iters))
     return _algorithmic_pallas(G, mask, float(nu), int(iters), bk=bk, bn=bn,
                                interpret=_interp(impl))
+
+
+def batched_onestep_decode(G, masks, rhos, *, impl="pallas",
+                           bb=128, bk=256, bn=256):
+    """V [B, k] = diag(rhos) (masks @ G^T): Algorithm 1 over a mask batch."""
+    if impl == "xla":
+        return _ref.batched_onestep_decode_ref(G, masks, rhos)
+    return _batched_onestep_pallas(G, masks, rhos, bb=bb, bk=bk, bn=bn,
+                                   interpret=_interp(impl))
+
+
+def batched_onestep_decode_ell(ell_idx, ell_val, masks, rhos, *,
+                               impl="pallas", bb=128, bk=512):
+    """Sparse batched Algorithm 1 over the row-ELL packing of G."""
+    if impl == "xla":
+        gathered = masks.astype(jnp.float32)[:, ell_idx.reshape(-1)]
+        B = masks.shape[0]
+        v = (gathered.reshape(B, *ell_idx.shape)
+             * ell_val.astype(jnp.float32)[None]).sum(axis=2)
+        return rhos.astype(jnp.float32)[:, None] * v
+    return _batched_onestep_ell_pallas(ell_idx, ell_val, masks, rhos,
+                                       bb=bb, bk=bk, interpret=_interp(impl))
+
+
+def batched_algorithmic_decode(G, masks, nus, iters, *, impl="pallas",
+                               bb=128, bk=256, bn=256,
+                               return_weights=False):
+    """U_iters [B, k] of the Lemma-12 iteration, one row per mask.
+
+    return_weights=True additionally returns the decode weights [B, n].
+    """
+    if impl == "xla":
+        Gf = G.astype(jnp.float32)
+        m = masks.astype(jnp.float32)
+        inv = jnp.where(nus > 0, 1.0 / nus, 1.0).astype(jnp.float32)[:, None]
+        U = jnp.ones((m.shape[0], Gf.shape[0]), jnp.float32)
+        X = jnp.zeros_like(m)
+        for _ in range(int(iters)):
+            T = (U @ Gf) * m
+            X = X + T * inv
+            U = U - (T @ Gf.T) * inv
+        return (U, X) if return_weights else U
+    return _batched_algorithmic_pallas(G, masks, nus, int(iters),
+                                       bb=bb, bk=bk, bn=bn,
+                                       interpret=_interp(impl),
+                                       return_weights=return_weights)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 __all__ = [
     "attention_ref", "rglru_scan_ref", "wkv_ref",
     "coded_accumulate_ref", "onestep_decode_ref", "algorithmic_decode_ref",
+    "batched_onestep_decode_ref", "batched_algorithmic_decode_ref",
 ]
 
 _NEG_INF = -1e30
@@ -106,3 +107,23 @@ def algorithmic_decode_ref(A: jax.Array, nu: float, iters: int) -> jax.Array:
     for _ in range(iters):
         u = u - A @ (A.T @ u) / nu
     return u
+
+
+def batched_onestep_decode_ref(G: jax.Array, masks: jax.Array,
+                               rhos: jax.Array) -> jax.Array:
+    """V[b] = rho_b * G @ m_b.  G [k,n], masks [B,n], rhos [B] -> [B,k]."""
+    V = masks.astype(jnp.float32) @ G.astype(jnp.float32).T
+    return rhos.astype(jnp.float32)[:, None] * V
+
+
+def batched_algorithmic_decode_ref(G: jax.Array, masks: jax.Array,
+                                   nus: jax.Array, iters: int) -> jax.Array:
+    """Per-mask Lemma-12 iterates.  Returns U [B, k]."""
+    G = G.astype(jnp.float32)
+    m = masks.astype(jnp.float32)
+    inv = jnp.where(nus > 0, 1.0 / nus, 1.0).astype(jnp.float32)[:, None]
+    U = jnp.ones((m.shape[0], G.shape[0]), jnp.float32)
+    for _ in range(iters):
+        T = (U @ G) * m
+        U = U - (T @ G.T) * inv
+    return U

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 __all__ = ["rglru_scan"]
 
 
@@ -91,7 +93,7 @@ def rglru_scan(
         out_specs=pl.BlockSpec((1, chunk, bd), lambda b, d, s: (b, s, d)),
         out_shape=jax.ShapeDtypeStruct((B, ns * chunk, nd * bd), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(uf, laf, h0f)

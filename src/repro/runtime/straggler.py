@@ -26,8 +26,14 @@ class StragglerModel:
         raise NotImplementedError
 
     def latencies(self, step: int, n: int) -> np.ndarray:
-        """Per-worker compute latencies (seconds) for the wall-clock model."""
-        rng = np.random.default_rng((hash((id(type(self)), step)) & 0xFFFF))
+        """Per-worker compute latencies (seconds) for the wall-clock model.
+
+        Deterministic in (seed, step) like every mask draw, so each host
+        derives the same value.  The base model is latency-free (unit
+        latencies); models with a real latency distribution override
+        this with a default_rng((self.seed, step)) draw.
+        """
+        del step
         return np.ones(n)
 
 
@@ -106,12 +112,28 @@ class CorrelatedStragglers(StragglerModel):
 @dataclasses.dataclass
 class AdversarialStragglers(StragglerModel):
     """Poly-time adversary (paper Sec. 4): FRC-structural if the code is an
-    FRC, else greedy; budget = floor(delta * n) stragglers per step."""
+    FRC, else greedy; budget = floor(delta * n) stragglers per step.
+
+    The adversarial mask depends only on (G, n), not on the step, so it
+    is computed once per worker count and cached — the greedy search is
+    O(n * budget) least-squares decodes, far too expensive to redo every
+    training step.
+    """
     G: np.ndarray
     delta: float
     mode: str = "auto"  # auto | frc | greedy
+    _cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                     compare=False)
 
     def sample(self, step: int, n: int) -> np.ndarray:
+        del step  # step-independent: the adversary always plays its best
+        cached = self._cache.get(n)
+        if cached is None:
+            cached = self._compute_mask(n)
+            self._cache[n] = cached
+        return cached.copy()
+
+    def _compute_mask(self, n: int) -> np.ndarray:
         budget = int(self.delta * n)
         if budget == 0:
             return np.ones(n, dtype=bool)

@@ -31,6 +31,7 @@ from ..checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from ..core import assignment as ASG
 from ..core import codes as CODES
 from ..core import decoding as DEC
+from ..core.engine import DecodeEngine
 from ..data import CodedDataPipeline, PipelineConfig
 from ..dist import use_mesh
 from ..models import Model
@@ -57,6 +58,7 @@ class CodedTrainConfig:
     keep_last: int = 2
     log_every: int = 10
     exact_decode_renorm: bool = True  # rescale w so sum(G@w)=k (unbiased-ish)
+    decode_cache_size: int = 512      # mask->weights LRU entries (engine)
 
 
 class CodedTrainer:
@@ -79,6 +81,10 @@ class CodedTrainer:
         t = self.tcfg
         self.code = CODES.make_code(t.code, k=n, n=n, s=min(t.s, n),
                                     rng=self.rng)
+        # one engine per live code; rebuilt (cache and all) on elastic
+        # re-coding since the weights are a function of G
+        self.engine = DecodeEngine(self.code, iters=t.decoder_iters,
+                                   cache_size=t.decode_cache_size)
         self.assignment = ASG.build_assignment(self.code)
         self.pipeline = CodedDataPipeline(
             self.assignment,
@@ -108,9 +114,13 @@ class CodedTrainer:
 
     # ------------- decode weights -------------
     def decode_weights_for(self, mask: np.ndarray) -> np.ndarray:
+        """mask -> decode weights via the engine's LRU cache.
+
+        Repeated masks (adversarial stragglers, stable deadline cohorts,
+        the no-straggler fast path) decode once per distinct mask.
+        """
         t = self.tcfg
-        kw = {"iters": t.decoder_iters} if t.decoder == "algorithmic" else {}
-        w = DEC.decode_weights(self.code.G, mask, method=t.decoder, **kw)
+        w = self.engine.decode(mask, method=t.decoder)
         if t.exact_decode_renorm and w.any():
             v = self.code.G @ w
             tot = float(v.sum())

@@ -1,0 +1,153 @@
+"""Minimal hypothesis stand-in (used only when the real package is
+absent — see tests/conftest.py).
+
+Implements the subset this repo's property tests use: @given with
+positional/keyword strategies, @settings(max_examples, deadline),
+assume(), and the integers / floats / booleans / sampled_from / tuples /
+lists strategies.  Examples are drawn from a deterministic per-test
+seed; there is no shrinking or example database.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+__version__ = "0.0-stub"
+
+
+class _Assumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+def note(_msg) -> None:
+    pass
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred, _tries: int = 100) -> "SearchStrategy":
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Assumption()
+        return SearchStrategy(draw)
+
+
+def integers(min_value=None, max_value=None) -> SearchStrategy:
+    lo = -(2 ** 31) if min_value is None else int(min_value)
+    hi = 2 ** 31 - 1 if max_value is None else int(max_value)
+    return SearchStrategy(lambda rng: rng.randint(lo, hi))
+
+
+def floats(min_value=None, max_value=None, **_kw) -> SearchStrategy:
+    lo = -1e6 if min_value is None else float(min_value)
+    hi = 1e6 if max_value is None else float(max_value)
+    return SearchStrategy(lambda rng: rng.uniform(lo, hi))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elements))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def tuples(*strategies) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def lists(elements, min_size=0, max_size=10, **_kw) -> SearchStrategy:
+    def draw(rng):
+        size = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(size)]
+    return SearchStrategy(draw)
+
+
+def one_of(*strategies) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.choice(strategies).draw(rng))
+
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+settings.register_profile = staticmethod(lambda *a, **k: None)
+settings.load_profile = staticmethod(lambda *a, **k: None)
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(
+                (fn.__module__ + "." + fn.__qualname__).encode())
+            rng = random.Random(seed)
+            ran = 0
+            attempts = 0
+            while ran < n and attempts < 10 * n + 10:
+                attempts += 1
+                try:
+                    drawn = tuple(s.draw(rng) for s in arg_strategies)
+                    drawn_kw = {name: s.draw(rng)
+                                for name, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except _Assumption:
+                    continue
+                ran += 1
+        # every parameter is strategy-supplied: hide the original
+        # signature so pytest doesn't look for same-named fixtures
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+# `from hypothesis import strategies as st` / `import hypothesis.strategies`
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("integers", "floats", "booleans", "sampled_from", "just",
+              "tuples", "lists", "one_of"):
+    setattr(strategies, _name, globals()[_name])
+strategies.SearchStrategy = SearchStrategy
+sys.modules.setdefault("hypothesis.strategies", strategies)

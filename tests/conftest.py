@@ -1,0 +1,16 @@
+"""Test bootstrap.
+
+The property tests use hypothesis.  When the real package is installed
+(CI, dev boxes) it is used as-is; on minimal containers we fall back to
+the vendored stub in tests/_stubs, which implements just the strategy /
+@given surface these tests consume (fixed-seed random sampling, no
+shrinking).
+"""
+
+import sys
+from pathlib import Path
+
+try:  # pragma: no cover - environment probe
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover
+    sys.path.insert(0, str(Path(__file__).resolve().parent / "_stubs"))
