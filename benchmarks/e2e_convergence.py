@@ -28,7 +28,7 @@ from repro.models import build_model
 from repro.optim import OptConfig
 from repro.runtime import DeadlineStragglers, FixedFractionStragglers, \
     NoStragglers
-from repro.runtime.latency import simulate_wallclock
+from repro.sim import trace_from_model, wallclock_summary
 from repro.training import CodedTrainConfig, CodedTrainer
 from .common import save_csv, save_json
 
@@ -74,8 +74,8 @@ def run(steps: int = 40, n_workers: int = 8, s: int = 2, delta: float = 0.25,
         # dominated by the machine's speed, not the task count.
         lat_model = DeadlineStragglers(deadline=1.5, tail_scale=0.4, seed=seed)
         policy = "sync" if name in ("oracle", "sync") else "deadline"
-        wc = simulate_wallclock(lat_model, n_workers, steps, policy=policy,
-                                compute_scale=1.0)
+        wc = wallclock_summary(trace_from_model(lat_model, steps, n_workers),
+                               policy=policy, compute_scale=1.0)
         rows.append({
             "variant": name, "code": code, "decoder": decoder,
             "delta": delta if stragglers else 0.0,

@@ -11,6 +11,7 @@ Runs, in order (E-numbers from DESIGN.md Sec. 4):
     E8     decoding_cost     decoder microbenchmarks vs k
     E9     roofline_report   roofline table from the dry-run artifacts
     E10    mc_throughput     looped vs batched Monte-Carlo decode
+    E11    wallclock_frontier  ClusterSim runtime-vs-accuracy frontier
 
 Artifacts land in artifacts/bench/ (+ artifacts/roofline.{json,md});
 each module prints PASS/MISMATCH against the paper's claims.
@@ -38,7 +39,7 @@ def main(argv=None) -> int:
 
     from . import adversary_bench, decoding_cost, e2e_convergence, \
         fig5_algorithmic, fig_errors, theory_check
-    from . import mc_throughput, roofline_report
+    from . import mc_throughput, roofline_report, wallclock_frontier
 
     jobs = [
         ("fig_errors", lambda: fig_errors.main(["--trials", str(trials)])),
@@ -52,6 +53,9 @@ def main(argv=None) -> int:
         ("decoding_cost", lambda: decoding_cost.main([])),
         ("mc_throughput",
          lambda: mc_throughput.main(["--trials", str(trials)])),
+        ("wallclock_frontier",
+         lambda: wallclock_frontier.main(
+             ["--steps", str(max(trials // 2, 100))])),
         ("roofline_report", lambda: roofline_report.main([])),
     ]
     if args.only:

@@ -1,0 +1,143 @@
+"""E11: ClusterSim wall-clock × accuracy frontier (the paper's headline
+trade-off, measured end to end).
+
+Two parts:
+
+  1. Frontier grid — one shared Pareto-tail latency trace, swept over
+     schemes × sync policies (and the one-step vs optimal decoders at
+     the grid corners): each cell is one ClusterSim run = one batched
+     decode, contributing a (wall-clock, decode-error) point.  The
+     Pareto front of those points IS the runtime-vs-accuracy frontier.
+
+  2. Throughput gate — at n = 256, S = 1000 steps, the ClusterSim path
+     (policy over the whole trace + ONE batched decode) must beat the
+     per-step decode loop (slice + scalar decode every step, the
+     pre-ClusterSim dataflow) by >= 10x.
+
+Artifacts: artifacts/bench/wallclock_frontier.{json,csv}.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import codes, decoding
+from repro.sim import (ClusterSim, make_policy, make_trace, pareto_front,
+                       sweep_frontier)
+from .common import ascii_curves, save_csv, save_json
+
+SCHEMES = ("frc", "bgc", "rbgc")
+POLICY_GRID = ("sync", "deadline", "backup", "adaptive")
+
+
+def _per_step_loop(code, trace, policy):
+    """The pre-ClusterSim dataflow: one policy step + one scalar decode
+    per step."""
+    G, k, s = code.G, code.k, code.s
+    S = trace.steps
+    times = np.empty(S)
+    errs = np.empty(S)
+    state = None
+    for t in range(S):
+        mask, times[t], state = policy.step(trace.latencies[t], state)
+        A = G[:, mask]
+        r = int(mask.sum())
+        errs[t] = decoding.err1(A, decoding.default_rho(k, r, s)) / k
+    return times, errs
+
+
+def run(n: int = 64, steps: int = 400, s: int = 8, seed: int = 0,
+        gate_n: int = 256, gate_steps: int = 1000):
+    trace = make_trace("pareto", steps=steps, n=n, deadline=1.5,
+                       tail_scale=0.4, seed=seed)
+
+    # ---- 1. the frontier grid ----
+    points = sweep_frontier(SCHEMES, POLICY_GRID, trace, s=s, seed=seed,
+                            decoders=("onestep", "optimal"))
+    rows = [p.as_dict() for p in points]
+    front = pareto_front(points)
+    series = {}
+    for scheme in SCHEMES:
+        ys = [p.mean_error for p in points
+              if p.scheme == scheme and p.decoder == "onestep"]
+        series[scheme] = ys
+    xs = [p.mean_step_time for p in points
+          if p.scheme == SCHEMES[0] and p.decoder == "onestep"]
+    print(ascii_curves("decode err/k by policy (x: policy index)",
+                       list(range(len(xs))), series))
+    print("\npareto front (mean_step_time, mean_err/k):")
+    for p in front:
+        print(f"  {p.scheme:>5} / {p.policy:<8} / {p.decoder:<8} "
+              f"t={p.mean_step_time:7.3f}s  err={p.mean_error:.4f}  "
+              f"t_target={p.time_to_target:8.1f}s")
+
+    # ---- 2. throughput gate: batched ClusterSim vs per-step loop ----
+    gate_trace = make_trace("pareto", steps=gate_steps, n=gate_n,
+                            deadline=1.5, tail_scale=0.4, seed=seed)
+    gcode = codes.make_code("bgc", k=gate_n, n=gate_n, s=12,
+                            rng=np.random.default_rng(seed))
+    policy = make_policy("deadline")
+    sim = ClusterSim(gcode, gate_trace, policy, decoder="onestep", s=12)
+
+    t0 = time.perf_counter()
+    res = sim.run()
+    t_batched = time.perf_counter() - t0
+    batch_calls = sim.engine.batch_calls
+
+    t0 = time.perf_counter()
+    loop_times, loop_errs = _per_step_loop(gcode, gate_trace, policy)
+    t_loop = time.perf_counter() - t0
+
+    speedup = t_loop / max(t_batched, 1e-12)
+    err_dev = float(np.abs(res.errors - loop_errs).max())
+    time_dev = float(np.abs(res.step_times - loop_times).max())
+    print(f"\nthroughput gate n={gate_n} S={gate_steps}: "
+          f"loop={t_loop:.3f}s  batched={t_batched:.3f}s  "
+          f"speedup={speedup:.1f}x  (decode calls: {batch_calls}, "
+          f"max err dev {err_dev:.2e})")
+
+    n_cells = len({(r["scheme"], r["policy"]) for r in rows})
+    checks = {
+        "grid_ge_3x3": bool(len(set(SCHEMES)) >= 3
+                            and len(set(POLICY_GRID)) >= 3
+                            and n_cells >= 9),
+        "one_batched_decode_per_cell": bool(batch_calls == 1),
+        "speedup_ge_10x": bool(speedup >= 10.0),
+        "errors_match_loop_1e-9": bool(err_dev <= 1e-9),
+        "times_match_loop_1e-9": bool(time_dev <= 1e-9),
+    }
+    payload = {
+        "trace": {"source": trace.source, "steps": steps, "n": n},
+        "rows": rows,
+        "pareto_front": [p.as_dict() for p in front],
+        "gate": {"n": gate_n, "steps": gate_steps, "loop_s": t_loop,
+                 "batched_s": t_batched, "speedup": speedup,
+                 "max_err_dev": err_dev},
+        "checks": checks,
+    }
+    save_json("wallclock_frontier", payload)
+    save_csv("wallclock_frontier", rows)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--s", type=int, default=8)
+    ap.add_argument("--gate-n", type=int, default=256)
+    ap.add_argument("--gate-steps", type=int, default=1000)
+    args = ap.parse_args(argv)
+    rep = run(n=args.n, steps=args.steps, s=args.s, gate_n=args.gate_n,
+              gate_steps=args.gate_steps)
+    print("wallclock frontier checks:", rep["checks"])
+    ok = all(rep["checks"].values())
+    print("PASS" if ok else "MISMATCH")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core import codes, decoding
 from repro.runtime import make_straggler_model
-from repro.runtime.latency import simulate_wallclock
+from repro.sim import make_trace, pareto_front, sweep_frontier
 
 
 def main(argv=None):
@@ -39,6 +39,8 @@ def main(argv=None):
                                  tail_scale=0.4, seed=0),
         "correlated(pod=8)": dict(name="correlated", pod_size=8,
                                   p_pod=0.1, p_node=0.05, seed=0),
+        "bimodal(slow-node)": dict(name="bimodal", slow_fraction=0.15,
+                                   deadline=1.5, seed=0),
         "adversarial": None,  # built per-code below (needs G)
     }
 
@@ -70,17 +72,23 @@ def main(argv=None):
             cells.append(f"{np.mean(e1s):>7.4f} | {np.mean(eos):>7.4f}")
         print(f"{sc_name:>18} | " + " | ".join(cells))
 
-    # ---- modelled wall clock: the trade the paper is buying ----
-    lat = make_straggler_model("deadline", deadline=1.5, tail_scale=0.4,
-                               seed=0)
-    sync = simulate_wallclock(lat, n, args.trials, policy="sync")
-    dead = simulate_wallclock(lat, n, args.trials, policy="deadline",
-                              deadline=1.5)
-    print(f"\nmodelled step time (Pareto tail): "
-          f"wait-for-all={sync['mean_step_time']:.3f}s   "
-          f"deadline={dead['mean_step_time']:.3f}s   "
-          f"(absorbing {dead['mean_stragglers']:.1f} stragglers/step "
-          f"as decode error)")
+    # ---- ClusterSim frontier: the trade the paper is buying, measured ----
+    trace = make_trace("pareto", steps=args.trials, n=n, deadline=1.5,
+                       tail_scale=0.4, seed=0)
+    points = sweep_frontier(("frc", "bgc", "rbgc"),
+                            ("sync", "deadline", "backup", "adaptive"),
+                            trace, s=s)
+    print("\nClusterSim frontier (Pareto-tail trace, one batched decode "
+          "per cell):")
+    print(f"{'scheme':>6} {'policy':>9} | {'step time':>9} "
+          f"{'err/k':>7} {'t->target':>9}")
+    for p in sorted(points, key=lambda p: (p.policy, p.scheme)):
+        print(f"{p.scheme:>6} {p.policy:>9} | {p.mean_step_time:>8.3f}s "
+              f"{p.mean_error:>7.4f} {p.time_to_target:>8.1f}s")
+    front = pareto_front(points)
+    print("pareto front: " + "   ".join(
+        f"{p.scheme}/{p.policy} ({p.mean_step_time:.2f}s, "
+        f"{p.mean_error:.4f})" for p in front))
     print("=> the paper's trade: bounded step time for a bounded, "
           "decodable gradient error.")
 

@@ -86,6 +86,9 @@ class DecodeEngine:
         self._cache_size = cache_size
         self.cache_hits = 0
         self.cache_misses = 0
+        # number of decode_batch invocations — ClusterSim's tests assert
+        # one batched decode per (scheme, policy) run against this
+        self.batch_calls = 0
 
     # ------------------------------------------------------------------
     # helpers
@@ -123,6 +126,7 @@ class DecodeEngine:
                      iters: Optional[int] = None) -> BatchDecode:
         """Decode a [B, n] mask ensemble -> weights [B, n], errors [B]."""
         masks = decoding._as_masks(masks, self.n)
+        self.batch_calls += 1
         if method == "onestep":
             return self._onestep_batch(masks)
         if method == "optimal":

@@ -4,6 +4,7 @@ from .faults import FaultInjector, FaultPlan  # noqa: F401
 from .latency import StepTimeModel, simulate_wallclock  # noqa: F401
 from .straggler import (  # noqa: F401
     AdversarialStragglers,
+    BimodalStragglers,
     CorrelatedStragglers,
     DeadlineStragglers,
     FixedFractionStragglers,

@@ -1,22 +1,24 @@
-"""Analytic wall-clock model: the paper's runtime-vs-robustness trade-off.
+"""DEPRECATED wall-clock shims — superseded by repro.sim (ClusterSim).
 
-The container is CPU-only, so step *times* are modelled, not measured:
-per-worker latencies come from the straggler model's distribution, and a
-synchronization policy maps them to a step time:
+The analytic runtime model now lives in ``sim.cluster``: a LatencyTrace
+([steps, n] latencies from any straggler model) is mapped by a sync
+policy (sync / deadline / backup / adaptive) to per-step masks and step
+times, and the whole run decodes in one batched DecodeEngine call.
 
-  * 'sync'      — wait for everyone: T = max_j L_j       (uncoded baseline)
-  * 'deadline'  — coded: T = min(deadline, max_j L_j); workers missing the
-                  deadline are stragglers absorbed as decode error
-  * 'backup'    — Dean-style backup tasks: T = (k/n-th order statistic)
+This module keeps the original public surface as thin wrappers so old
+callers and scripts keep working:
 
-These combine with the decoder's error to reproduce the paper's central
-claim: small decode error buys a large tail-latency reduction.
+  * ``simulate_wallclock`` delegates to ``sim.cluster.wallclock_summary``
+    (bit-identical output — proven by tests/test_sim_cluster.py).  The
+    old code compared ``lat * compute_scale <= deadline * compute_scale``;
+    the redundant scaling cancels and is gone.
+  * ``StepTimeModel`` delegates to the sim policy objects.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import warnings
 
 import numpy as np
 
@@ -27,12 +29,14 @@ __all__ = ["StepTimeModel", "simulate_wallclock"]
 
 @dataclasses.dataclass
 class StepTimeModel:
+    """Deprecated: use a sim.cluster SyncPolicy."""
+
     policy: str = "deadline"       # sync | deadline | backup
     deadline: float = 1.5
     compute_scale: float = 1.0     # relative per-step compute (s tasks vs 1)
 
     def step_time(self, latencies: np.ndarray) -> float:
-        lat = latencies * self.compute_scale
+        lat = np.asarray(latencies) * self.compute_scale
         if self.policy == "sync":
             return float(lat.max())
         if self.policy == "deadline":
@@ -45,20 +49,21 @@ class StepTimeModel:
 def simulate_wallclock(model: StragglerModel, n: int, steps: int,
                        policy: str = "deadline", deadline: float = 1.5,
                        compute_scale: float = 1.0) -> dict:
-    """Aggregate modelled wall-clock + straggler stats over `steps`."""
-    tm = StepTimeModel(policy=policy, deadline=deadline,
-                       compute_scale=compute_scale)
-    total, masks = 0.0, []
-    for t in range(steps):
-        lat = model.latencies(t, n)
-        total += tm.step_time(lat)
-        masks.append(lat * compute_scale
-                     <= deadline * compute_scale if policy == "deadline"
-                     else np.ones(n, bool))
-    masks = np.asarray(masks)
-    return {
-        "total_time": total,
-        "mean_step_time": total / steps,
-        "mean_stragglers": float((~masks).sum(1).mean()),
-        "worst_stragglers": int((~masks).sum(1).max()),
-    }
+    """Deprecated wrapper over sim.cluster.wallclock_summary.
+
+    Prefer building a LatencyTrace + ClusterSim directly — that path
+    also co-simulates decoding, which this summary never did.
+    """
+    warnings.warn(
+        "runtime.latency.simulate_wallclock is deprecated; use "
+        "repro.sim (trace_from_model + ClusterSim / wallclock_summary)",
+        DeprecationWarning, stacklevel=2)
+    from ..sim.cluster import wallclock_summary
+    from ..sim.traces import LatencyTrace
+    # exact old semantics: the model's own latencies() rows — unit
+    # latencies for mask-only models, NOT the two-point lift that
+    # sim.traces.trace_from_model applies for the co-simulation
+    lat = np.stack([model.latencies(t, n) for t in range(steps)])
+    trace = LatencyTrace(lat, source=type(model).__name__)
+    return wallclock_summary(trace, policy=policy, deadline=deadline,
+                             compute_scale=compute_scale)

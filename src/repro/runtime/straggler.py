@@ -16,7 +16,8 @@ from ..core import adversary as ADV
 
 __all__ = ["StragglerModel", "NoStragglers", "IIDStragglers",
            "FixedFractionStragglers", "DeadlineStragglers",
-           "CorrelatedStragglers", "AdversarialStragglers", "make_straggler_model"]
+           "CorrelatedStragglers", "AdversarialStragglers",
+           "BimodalStragglers", "make_straggler_model"]
 
 
 class StragglerModel:
@@ -110,6 +111,44 @@ class CorrelatedStragglers(StragglerModel):
 
 
 @dataclasses.dataclass
+class BimodalStragglers(StragglerModel):
+    """Bimodal slow-node fleet: a fixed subset of nodes is persistently
+    slow (bad NIC, thermal throttling, noisy neighbour) while the rest
+    are fast; every node adds per-step log-normal jitter.
+
+    The slow set is a deterministic function of the seed alone — the
+    same nodes are slow on every step, the empirically common 'that one
+    bad host' regime that iid models can't express.  Stragglers are the
+    nodes whose jittered latency misses the deadline, so with
+    deadline between the two modes the straggler set is essentially the
+    slow set.
+    """
+    slow_fraction: float = 0.1
+    fast: float = 1.0
+    slow: float = 3.0
+    jitter: float = 0.05      # sigma of multiplicative log-normal noise
+    deadline: float = 1.5
+    seed: int = 0
+
+    def slow_nodes(self, n: int) -> np.ndarray:
+        """Boolean [n] slow-set indicator, step-independent."""
+        rng = np.random.default_rng((self.seed, 0x51))
+        k_slow = int(round(self.slow_fraction * n))
+        slow = np.zeros(n, dtype=bool)
+        if k_slow:
+            slow[rng.choice(n, k_slow, replace=False)] = True
+        return slow
+
+    def latencies(self, step: int, n: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, step))
+        base = np.where(self.slow_nodes(n), self.slow, self.fast)
+        return base * np.exp(self.jitter * rng.standard_normal(n))
+
+    def sample(self, step: int, n: int) -> np.ndarray:
+        return self.latencies(step, n) <= self.deadline
+
+
+@dataclasses.dataclass
 class AdversarialStragglers(StragglerModel):
     """Poly-time adversary (paper Sec. 4): FRC-structural if the code is an
     FRC, else greedy; budget = floor(delta * n) stragglers per step.
@@ -155,6 +194,7 @@ def make_straggler_model(name: str, **kw) -> StragglerModel:
         "deadline": DeadlineStragglers,
         "correlated": CorrelatedStragglers,
         "adversarial": AdversarialStragglers,
+        "bimodal": BimodalStragglers,
     }
     if name not in models:
         raise ValueError(f"unknown straggler model {name!r}")

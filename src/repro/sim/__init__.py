@@ -1,0 +1,31 @@
+"""ClusterSim: trace-driven wall-clock × accuracy co-simulation.
+
+trace (sim.traces) -> masks + step times (sim.cluster sync policies)
+-> one batched decode per run (core.engine) -> frontiers (sim.frontier).
+See DESIGN.md §8.
+"""
+
+from .cluster import (  # noqa: F401
+    AdaptiveDeadline,
+    BackupPolicy,
+    ClusterRunResult,
+    ClusterSim,
+    DeadlinePolicy,
+    POLICIES,
+    SyncPolicy,
+    WaitForAll,
+    make_policy,
+    wallclock_summary,
+)
+from .frontier import (  # noqa: F401
+    FrontierPoint,
+    pareto_front,
+    sweep_frontier,
+    time_to_target_error,
+)
+from .traces import (  # noqa: F401
+    LatencyTrace,
+    TRACE_SOURCES,
+    make_trace,
+    trace_from_model,
+)

@@ -1,0 +1,295 @@
+"""ClusterSim: co-simulate wall-clock and decoding over whole runs.
+
+Dataflow (DESIGN.md §8):
+
+    LatencyTrace [S, n]
+        --(sync policy)-->  masks [S, n]  +  step_times [S]
+        --(DecodeEngine)->  per-step decode errors [S]   (ONE batched call)
+
+The policy layer is vectorized: sync / deadline / backup map the whole
+trace to masks and times with numpy reductions; the adaptive-deadline
+controller is the one inherently sequential policy (its deadline at step
+t depends on the straggler fraction it observed at t-1) and runs a cheap
+O(S·n) python loop — but decoding stays a single ``decode_batch`` over
+all S masks per (scheme, policy) cell, never a per-step decode loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from ..core.codes import GradientCode
+from ..core.engine import DecodeEngine
+from .traces import LatencyTrace
+
+__all__ = [
+    "SyncPolicy", "WaitForAll", "DeadlinePolicy", "BackupPolicy",
+    "AdaptiveDeadline", "make_policy", "POLICIES",
+    "ClusterRunResult", "ClusterSim", "wallclock_summary",
+]
+
+
+# --------------------------------------------------------------------------
+# sync policies: trace -> (masks, step_times)
+# --------------------------------------------------------------------------
+
+
+class SyncPolicy:
+    """Maps a latency row to (non-straggler mask, step time).
+
+    ``apply`` consumes a whole [S, n] trace at once (vectorized where the
+    policy allows); ``step`` is the incremental form the training loop
+    uses, threading opaque controller state.
+    """
+
+    name = "base"
+
+    def step(self, lat: np.ndarray, state=None
+             ) -> Tuple[np.ndarray, float, object]:
+        raise NotImplementedError
+
+    def apply(self, lat: np.ndarray
+              ) -> Tuple[np.ndarray, np.ndarray, Dict[str, np.ndarray]]:
+        """[S, n] latencies -> (masks [S, n] bool, times [S], extras)."""
+        S, n = lat.shape
+        masks = np.empty((S, n), dtype=bool)
+        times = np.empty(S)
+        state = None
+        for t in range(S):
+            masks[t], times[t], state = self.step(lat[t], state)
+        return masks, times, {}
+
+
+@dataclasses.dataclass
+class WaitForAll(SyncPolicy):
+    """Uncoded baseline: wait for every worker; nobody straggles."""
+
+    name = "sync"
+
+    def step(self, lat, state=None):
+        return np.ones(lat.shape[-1], dtype=bool), float(lat.max()), state
+
+    def apply(self, lat):
+        S, n = lat.shape
+        return np.ones((S, n), dtype=bool), lat.max(axis=1), {}
+
+
+@dataclasses.dataclass
+class DeadlinePolicy(SyncPolicy):
+    """Fixed deadline: workers past it are stragglers absorbed as decode
+    error; the step ends at min(deadline, slowest worker)."""
+
+    deadline: float = 1.5
+    name = "deadline"
+
+    def step(self, lat, state=None):
+        return (lat <= self.deadline,
+                float(min(self.deadline, lat.max())), state)
+
+    def apply(self, lat):
+        return (lat <= self.deadline,
+                np.minimum(self.deadline, lat.max(axis=1)), {})
+
+
+@dataclasses.dataclass
+class BackupPolicy(SyncPolicy):
+    """Dean-style backup tasks: the step ends when a `quantile` fraction
+    of workers has reported; later arrivals are the stragglers."""
+
+    quantile: float = 0.95
+    name = "backup"
+
+    # method='higher' picks the actual arrival time of the quantile
+    # worker, so at least ceil(quantile * n) workers report every step
+    def step(self, lat, state=None):
+        cut = float(np.quantile(lat, self.quantile, method="higher"))
+        return lat <= cut, cut, state
+
+    def apply(self, lat):
+        cuts = np.quantile(lat, self.quantile, axis=1, method="higher")
+        return lat <= cuts[:, None], cuts, {}
+
+
+@dataclasses.dataclass
+class AdaptiveDeadline(SyncPolicy):
+    """Online deadline controller: tune the deadline toward a target
+    straggler fraction.
+
+    Multiplicative-exponential update (always positive, scale-free):
+
+        d_{t+1} = clip(d_t * exp(gain * (frac_t - target)), dmin, dmax)
+
+    where frac_t is the straggler fraction observed under d_t.  Too many
+    stragglers -> the deadline relaxes; too few -> it tightens, trading
+    wall-clock back for decode accuracy until the cluster sits at the
+    target point of the paper's frontier.
+    """
+
+    target: float = 0.1        # straggler fraction to steer toward
+    gain: float = 0.5
+    d0: float = 1.5            # initial deadline
+    dmin: float = 1e-3
+    dmax: float = 1e3
+    name = "adaptive"
+
+    def step(self, lat, state=None):
+        d = self.d0 if state is None else float(state)
+        mask = lat <= d
+        time = float(min(d, lat.max()))
+        frac = 1.0 - mask.mean()
+        d_next = float(np.clip(d * np.exp(self.gain * (frac - self.target)),
+                               self.dmin, self.dmax))
+        return mask, time, d_next
+
+    def apply(self, lat):
+        S, n = lat.shape
+        masks = np.empty((S, n), dtype=bool)
+        times = np.empty(S)
+        deadlines = np.empty(S)
+        state = None
+        for t in range(S):
+            deadlines[t] = self.d0 if state is None else state
+            masks[t], times[t], state = self.step(lat[t], state)
+        return masks, times, {"deadlines": deadlines}
+
+
+POLICIES = ("sync", "deadline", "backup", "adaptive")
+
+
+def make_policy(name_or_policy: Union[str, SyncPolicy], **kw) -> SyncPolicy:
+    if isinstance(name_or_policy, SyncPolicy):
+        return name_or_policy
+    registry = {"sync": WaitForAll, "deadline": DeadlinePolicy,
+                "backup": BackupPolicy, "adaptive": AdaptiveDeadline}
+    if name_or_policy not in registry:
+        raise ValueError(f"unknown sync policy {name_or_policy!r}; "
+                         f"have {POLICIES}")
+    return registry[name_or_policy](**kw)
+
+
+# --------------------------------------------------------------------------
+# the co-simulation
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClusterRunResult:
+    """One (code, trace, policy, decoder) cell of the co-simulation."""
+
+    scheme: str
+    policy: str
+    decoder: str
+    step_times: np.ndarray     # [S] modelled seconds per step
+    masks: np.ndarray          # [S, n] non-straggler masks
+    errors: np.ndarray         # [S] decode error / k per step
+    extras: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    @property
+    def steps(self) -> int:
+        return int(self.step_times.shape[0])
+
+    @property
+    def total_time(self) -> float:
+        return float(self.step_times.sum())
+
+    @property
+    def mean_step_time(self) -> float:
+        return float(self.step_times.mean())
+
+    @property
+    def mean_error(self) -> float:
+        return float(self.errors.mean())
+
+    @property
+    def mean_stragglers(self) -> float:
+        return float((~self.masks).sum(axis=1).mean())
+
+    @property
+    def worst_stragglers(self) -> int:
+        return int((~self.masks).sum(axis=1).max())
+
+    def summary(self) -> dict:
+        return {
+            "scheme": self.scheme, "policy": self.policy,
+            "decoder": self.decoder, "steps": self.steps,
+            "total_time": self.total_time,
+            "mean_step_time": self.mean_step_time,
+            "mean_error": self.mean_error,
+            "mean_stragglers": self.mean_stragglers,
+            "worst_stragglers": self.worst_stragglers,
+        }
+
+
+class ClusterSim:
+    """Trace-driven wall-clock × accuracy co-simulation for one code.
+
+    The whole run decodes in exactly ONE DecodeEngine.decode_batch call:
+    the policy first maps the trace to all S masks, then the engine
+    decodes the [S, n] ensemble.  `engine.batch_calls` before/after is
+    the test hook for that invariant.
+    """
+
+    def __init__(self, code: GradientCode, trace: LatencyTrace,
+                 policy: Union[str, SyncPolicy] = "deadline", *,
+                 decoder: str = "onestep", backend: str = "numpy",
+                 s: Optional[int] = None, iters: int = 8,
+                 engine: Optional[DecodeEngine] = None, **policy_kw):
+        if trace.n != code.n:
+            raise ValueError(f"trace has n={trace.n} workers but code has "
+                             f"n={code.n}")
+        self.code = code
+        self.trace = trace
+        self.policy = make_policy(policy, **policy_kw)
+        self.decoder = decoder
+        self.engine = engine if engine is not None else DecodeEngine(
+            code, backend=backend, s=s, iters=iters)
+
+    def run(self) -> ClusterRunResult:
+        masks, times, extras = self.policy.apply(self.trace.latencies)
+        errors = self.engine.errors_batch(masks, self.decoder) / self.code.k
+        return ClusterRunResult(
+            scheme=self.code.name, policy=self.policy.name,
+            decoder=self.decoder, step_times=times, masks=masks,
+            errors=errors, extras=extras)
+
+
+# --------------------------------------------------------------------------
+# legacy aggregate summary (the old runtime.latency.simulate_wallclock)
+# --------------------------------------------------------------------------
+
+
+def wallclock_summary(trace: LatencyTrace, policy: str = "deadline",
+                      deadline: float = 1.5,
+                      compute_scale: float = 1.0) -> dict:
+    """Aggregate wall-clock + straggler stats, old simulate_wallclock
+    semantics folded into the trace API.
+
+    The old implementation compared ``lat * compute_scale <= deadline *
+    compute_scale`` — the scale cancels, so the mask is just ``lat <=
+    deadline`` on the unscaled trace; only the step *times* scale.  Old
+    quirks preserved for parity: 'sync' and 'backup' report zero
+    stragglers (their mask statistic was all-ones), and 'backup' uses the
+    0.95 quantile of the scaled latencies.
+    """
+    lat = trace.latencies * compute_scale
+    if policy == "sync":
+        times = lat.max(axis=1)
+        masks = np.ones(lat.shape, dtype=bool)
+    elif policy == "deadline":
+        times = np.minimum(deadline * compute_scale, lat.max(axis=1))
+        masks = trace.latencies <= deadline
+    elif policy == "backup":
+        times = np.quantile(lat, 0.95, axis=1)
+        masks = np.ones(lat.shape, dtype=bool)
+    else:
+        raise ValueError(policy)
+    total = float(times.sum())
+    return {
+        "total_time": total,
+        "mean_step_time": total / trace.steps,
+        "mean_stragglers": float((~masks).sum(axis=1).mean()),
+        "worst_stragglers": int((~masks).sum(axis=1).max()),
+    }

@@ -1,0 +1,110 @@
+"""Runtime-vs-accuracy frontiers: the paper's central figure, sweepable.
+
+Each (scheme, decoder, policy) cell runs one ClusterSim over a shared
+latency trace and contributes a point (wall-clock, decode error).  The
+frontier is the Pareto set of those points: the policies that buy the
+most tail-latency for the least decode error.
+
+``time_to_target_error`` converts a cell to a single scalar: the
+modelled wall-clock to finish S optimization steps, inflated by the
+standard first-order penalty for training on approximate gradients —
+a gradient with relative decoding error e per step needs ~1/(1 - e)
+times the steps to reach the same loss (e >= 1 never converges).  It is
+a *model*, not a measurement; benchmarks/e2e_convergence.py measures the
+real thing on a small LM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from ..core import codes as codes_lib
+from .cluster import ClusterRunResult, ClusterSim, SyncPolicy, make_policy
+from .traces import LatencyTrace
+
+__all__ = ["FrontierPoint", "sweep_frontier", "pareto_front",
+           "time_to_target_error"]
+
+
+@dataclasses.dataclass
+class FrontierPoint:
+    scheme: str
+    policy: str
+    decoder: str
+    total_time: float
+    mean_step_time: float
+    mean_error: float          # mean decode err / k over the run
+    mean_stragglers: float
+    time_to_target: float      # convergence-penalty-adjusted wall-clock
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def time_to_target_error(result: ClusterRunResult,
+                         max_inflation: float = 100.0) -> float:
+    """Modelled time to a fixed optimization target (see module doc).
+
+    total_time / (1 - mean_error), clipped: cells whose decode error
+    approaches/exceeds 1 (gradient mostly noise) saturate at
+    `max_inflation` x rather than going infinite/negative.
+    """
+    e = result.mean_error
+    inflation = max_inflation if e >= 1.0 else min(1.0 / (1.0 - e),
+                                                   max_inflation)
+    return result.total_time * inflation
+
+
+def sweep_frontier(
+    schemes: Sequence[str],
+    policies: Sequence[Union[str, SyncPolicy]],
+    trace: LatencyTrace,
+    *,
+    k: Optional[int] = None,
+    s: int = 8,
+    decoders: Sequence[str] = ("onestep",),
+    seed: int = 0,
+    backend: str = "numpy",
+    iters: int = 8,
+    policy_kw: Optional[Dict[str, dict]] = None,
+) -> List[FrontierPoint]:
+    """One ClusterSim per (scheme, decoder, policy) cell over a shared
+    trace; every cell is exactly one batched decode."""
+    n = trace.n
+    k = n if k is None else k
+    policy_kw = policy_kw or {}
+    out: List[FrontierPoint] = []
+    for scheme in schemes:
+        code = codes_lib.make_code(scheme, k=k, n=n, s=s,
+                                   rng=np.random.default_rng(seed))
+        for decoder in decoders:
+            for pol in policies:
+                name = pol if isinstance(pol, str) else pol.name
+                policy = make_policy(pol, **policy_kw.get(name, {}))
+                res = ClusterSim(code, trace, policy, decoder=decoder,
+                                 backend=backend, s=s, iters=iters).run()
+                out.append(FrontierPoint(
+                    scheme=scheme, policy=res.policy, decoder=decoder,
+                    total_time=res.total_time,
+                    mean_step_time=res.mean_step_time,
+                    mean_error=res.mean_error,
+                    mean_stragglers=res.mean_stragglers,
+                    time_to_target=time_to_target_error(res)))
+    return out
+
+
+def pareto_front(points: Sequence[FrontierPoint],
+                 x: str = "mean_step_time",
+                 y: str = "mean_error") -> List[FrontierPoint]:
+    """Non-dominated subset (minimize both axes), sorted by x."""
+    pts = sorted(points, key=lambda p: (getattr(p, x), getattr(p, y)))
+    front: List[FrontierPoint] = []
+    best_y = np.inf
+    for p in pts:
+        if getattr(p, y) < best_y - 1e-15:
+            front.append(p)
+            best_y = getattr(p, y)
+    return front

@@ -1,0 +1,145 @@
+"""LatencyTrace: the one latency abstraction behind ClusterSim.
+
+A trace is a ``[steps, n]`` matrix of per-worker compute latencies for a
+whole run — the co-simulation's ground truth.  Everything upstream of
+the sync policy is a trace source:
+
+  * the straggler models in ``runtime.straggler`` that own a real
+    latency distribution (Pareto-tail deadline, bimodal slow-node)
+    contribute their ``latencies(step, n)`` rows directly;
+  * mask-only models (iid, fixed-fraction, pod-correlated, adversarial)
+    are lifted to latencies by mapping straggler -> ``slow`` and
+    non-straggler -> ``base`` — the two-point distribution their mask
+    semantics already implies;
+  * recorded cluster traces replay from JSON (``LatencyTrace.load``).
+
+This unifies ``runtime/latency.py`` (which sampled latencies step by
+step) and ``runtime/straggler.py`` (which sampled masks) behind one API:
+a trace is sampled once, then any sync policy in ``sim.cluster`` maps it
+to per-step masks + step times, and the DecodeEngine decodes all the
+masks in one batched call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Optional, Union
+
+import numpy as np
+
+from ..runtime.straggler import StragglerModel, make_straggler_model
+
+__all__ = ["LatencyTrace", "trace_from_model", "make_trace", "TRACE_SOURCES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyTrace:
+    """Per-worker latencies for a whole run: ``latencies[t, j]`` is the
+    compute time of worker j at step t (seconds)."""
+
+    latencies: np.ndarray          # [steps, n] float64
+    source: str = "unknown"
+
+    def __post_init__(self):
+        lat = np.asarray(self.latencies, dtype=np.float64)
+        if lat.ndim != 2:
+            raise ValueError(f"trace must be [steps, n], got {lat.shape}")
+        if lat.size and lat.min() < 0:
+            raise ValueError("latencies must be non-negative")
+        object.__setattr__(self, "latencies", lat)
+
+    @property
+    def steps(self) -> int:
+        return int(self.latencies.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.latencies.shape[1])
+
+    def scaled(self, compute_scale: float) -> "LatencyTrace":
+        """Rescale every latency (s coded tasks cost ~s/1 of the uncoded
+        step — the paper's compute-overhead axis)."""
+        return LatencyTrace(self.latencies * float(compute_scale),
+                            source=self.source)
+
+    def window(self, start: int, stop: Optional[int] = None) -> "LatencyTrace":
+        return LatencyTrace(self.latencies[start:stop], source=self.source)
+
+    def tile(self, steps: int) -> "LatencyTrace":
+        """Repeat the trace to cover `steps` rows (replay longer runs)."""
+        reps = -(-steps // self.steps)
+        return LatencyTrace(np.tile(self.latencies, (reps, 1))[:steps],
+                            source=self.source)
+
+    # ---------------------------- JSON replay ----------------------------
+
+    def to_json(self) -> str:
+        return json.dumps({"source": self.source,
+                           "latencies": self.latencies.tolist()})
+
+    @classmethod
+    def from_json(cls, text: str) -> "LatencyTrace":
+        obj = json.loads(text)
+        return cls(np.asarray(obj["latencies"], dtype=np.float64),
+                   source=obj.get("source", "replay"))
+
+    def save(self, path: Union[str, Path]) -> Path:
+        p = Path(path)
+        p.write_text(self.to_json())
+        return p
+
+    @classmethod
+    def load(cls, path: Union[str, Path]) -> "LatencyTrace":
+        return cls.from_json(Path(path).read_text())
+
+
+def _has_latency_distribution(model: StragglerModel) -> bool:
+    """True when the model overrides the base unit-latency stub."""
+    return type(model).latencies is not StragglerModel.latencies
+
+
+def trace_from_model(model: StragglerModel, steps: int, n: int, *,
+                     base: float = 1.0, slow: float = 3.0) -> LatencyTrace:
+    """Sample a [steps, n] trace from any straggler model.
+
+    Models with a real latency distribution (DeadlineStragglers,
+    BimodalStragglers) are sampled directly; mask-only models are lifted
+    via straggler -> `slow`, non-straggler -> `base`.
+    """
+    lat = np.empty((steps, n))
+    if _has_latency_distribution(model):
+        for t in range(steps):
+            lat[t] = model.latencies(t, n)
+    else:
+        for t in range(steps):
+            lat[t] = np.where(model.sample(t, n), base, slow)
+    return LatencyTrace(lat, source=type(model).__name__)
+
+
+# sources with first-class latency semantics; anything accepted by
+# make_straggler_model also works (lifted through the two-point map)
+TRACE_SOURCES = ("pareto", "bimodal", "correlated", "adversarial",
+                 "iid", "fixed", "none", "replay")
+
+
+def make_trace(source: str, steps: int = 0, n: int = 0, *,
+               path: Optional[Union[str, Path]] = None,
+               base: float = 1.0, slow: float = 3.0,
+               **kw) -> LatencyTrace:
+    """Trace factory: named straggler models plus JSON replay.
+
+    'pareto' aliases the DeadlineStragglers Pareto-tail model; 'replay'
+    loads `path` and tiles it to `steps` when steps > 0.
+    """
+    if source == "replay":
+        if path is None:
+            raise ValueError("replay trace needs path=")
+        trace = LatencyTrace.load(path)
+        return trace.tile(steps) if steps else trace
+    if steps <= 0 or n <= 0:
+        raise ValueError("generated traces need steps > 0 and n > 0")
+    name = "deadline" if source == "pareto" else source
+    model = make_straggler_model(name, **kw)
+    return trace_from_model(model, steps, n, base=base, slow=slow)

@@ -14,6 +14,13 @@ Per step:
 Elasticity: on hard faults the worker set shrinks, the code is rebuilt
 for n' (O(n s)), the assignment/pipeline remapped, and training continues
 without losing optimizer state.
+
+Co-simulation hook: pass ``trace=`` (a sim.traces.LatencyTrace) and the
+trainer derives each step's straggler mask from the trace through a sync
+policy (``sync_policy=``, default a 1.5s deadline) instead of the
+straggler model, and logs the modelled wall-clock per step
+(``step_time`` / cumulative ``sim_time`` in history) — the ClusterSim
+dataflow riding the real training loop.
 """
 
 from __future__ import annotations
@@ -65,16 +72,43 @@ class CodedTrainer:
     def __init__(self, model: Model, tcfg: CodedTrainConfig,
                  straggler_model: Optional[StragglerModel] = None,
                  fault_injector: Optional[FaultInjector] = None,
-                 mesh=None):
+                 mesh=None, trace=None, sync_policy=None):
         self.model = model
         self.tcfg = tcfg
         self.straggler = straggler_model or NoStragglers()
         self.faults = fault_injector or FaultInjector()
         self.mesh = mesh
         self.rng = np.random.default_rng(tcfg.seed)
+        # trace-driven co-simulation (sim.cluster): trace rows -> masks +
+        # modelled step times through a sync policy
+        self.trace = trace
+        self.sync_policy = None
+        self._policy_state = None
+        self.sim_time = 0.0
+        if trace is not None:
+            from ..sim.cluster import make_policy
+            if trace.n != tcfg.n_workers:
+                raise ValueError(f"trace has n={trace.n} workers, config "
+                                 f"has n_workers={tcfg.n_workers}")
+            self.sync_policy = make_policy(sync_policy or "deadline")
+        elif sync_policy is not None:
+            raise ValueError("sync_policy requires trace=")
         self._build_code(tcfg.n_workers)
         self._step_fn = self._make_step_fn()
         self.history: list = []
+
+    def _mask_and_time(self, step: int, n: int):
+        """(mask, modelled step time | None) — trace-driven when a trace
+        is attached, else the straggler model with no time model."""
+        if self.trace is None:
+            return self.straggler.sample(step, n), None
+        lat = self.trace.latencies[step % self.trace.steps]
+        if n != lat.shape[0]:   # elastic shrink: simulate surviving workers
+            lat = lat[:n]
+        mask, t, self._policy_state = self.sync_policy.step(
+            lat, self._policy_state)
+        self.sim_time += t
+        return mask, t
 
     # ------------- code / assignment / pipeline -------------
     def _build_code(self, n: int) -> None:
@@ -163,7 +197,7 @@ class CodedTrainer:
                     self._build_code(max(alive, 2))
 
                 # --- straggler mask -> decode weights -> coded batch ---
-                mask = self.straggler.sample(step, self.assignment.n)
+                mask, step_time = self._mask_and_time(step, self.assignment.n)
                 w = self.decode_weights_for(mask)
                 batch_np = self.pipeline.batch_for_step(step, w)
                 batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
@@ -185,6 +219,9 @@ class CodedTrainer:
                                if t.decoder == "onestep" else
                                DEC.err(self.code.G[:, mask])) / self.code.k,
                            "n_workers": self.assignment.n}
+                    if step_time is not None:
+                        rec["step_time"] = float(step_time)
+                        rec["sim_time"] = float(self.sim_time)
                     self.history.append(rec)
 
                 if ckpt and t.ckpt_every and (step + 1) % t.ckpt_every == 0:

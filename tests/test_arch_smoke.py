@@ -10,6 +10,8 @@ import pytest
 from repro import configs as CFG
 from repro.models import SHAPES, build_model
 
+pytestmark = pytest.mark.slow  # e2e forward/decode across all archs
+
 ARCHS = CFG.list_archs()
 
 

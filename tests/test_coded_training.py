@@ -17,6 +17,8 @@ from repro.runtime import (FaultInjector, FaultPlan, FixedFractionStragglers,
 from repro.training import (CodedTrainConfig, CodedTrainer,
                             explicit_master_decode_grads)
 
+pytestmark = pytest.mark.slow  # training e2e: jit + multi-step loops
+
 
 def tiny_model():
     cfg = CFG.get_config("minicpm-2b", smoke=True)

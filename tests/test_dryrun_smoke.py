@@ -17,6 +17,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess 512-device compile dry-run
+
 REPO = Path(__file__).resolve().parent.parent
 
 PROG = textwrap.dedent("""

@@ -1,0 +1,125 @@
+"""Golden regression tests for the Monte-Carlo statistical core.
+
+These pin `monte_carlo_error` means for frc / bgc / cyclic at fixed
+seeds so a decoder or engine refactor cannot silently shift the
+Fig. 2-4 curves: the sampled masks and decode path are deterministic
+given (seed, scheme, params), so the means must reproduce to float
+rounding (GOLDEN_RTOL absorbs BLAS reduction-order differences only).
+
+Each pinned cell is also cross-checked against the closed forms in
+core/theory.py with an explicit tolerance band sized from the cell's
+Monte-Carlo standard error — the pin guards the implementation, the
+band guards the statistics.
+"""
+
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core import theory as T
+from repro.core.simulate import monte_carlo_error
+
+SEED = 1234
+K = 100
+# float-rounding band for the golden pins: the mask sampling and decode
+# are bit-deterministic given the seed; only BLAS summation order varies
+GOLDEN_RTOL = 1e-6
+
+# (scheme, s, delta, decoder, trials) -> golden mean err/k at SEED
+GOLDEN_MEANS = {
+    ("frc", 5, 0.1, "onestep", 2000): 0.021362962962962976,
+    ("frc", 5, 0.3, "onestep", 2000): 0.08189795918367344,
+    ("frc", 5, 0.3, "optimal", 2000): 0.0014500000000000001,
+    ("bgc", 10, 0.1, "onestep", 2000): 0.09567327160493827,
+    ("bgc", 10, 0.3, "onestep", 2000): 0.12401530612244897,
+    ("bgc", 10, 0.3, "optimal", 2000): 0.041239671937050366,
+    ("cyclic", 5, 0.1, "onestep", 2000): 0.02121283950617285,
+    ("cyclic", 5, 0.3, "onestep", 2000): 0.08228489795918367,
+    ("cyclic", 5, 0.3, "optimal", 2000): 0.011826251648357544,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _run(scheme, s, delta, decoder, trials, **kw):
+    return monte_carlo_error(scheme, k=K, n=K, s=s, delta=delta,
+                             trials=trials, decoder=decoder, seed=SEED, **kw)
+
+
+@pytest.mark.parametrize("cell,golden", sorted(GOLDEN_MEANS.items()))
+def test_golden_mean_pinned(cell, golden):
+    scheme, s, delta, decoder, trials = cell
+    res = _run(scheme, s, delta, decoder, trials)
+    assert res.mean == pytest.approx(golden, rel=GOLDEN_RTOL), (
+        f"{cell}: Monte-Carlo mean moved from the pinned golden value — "
+        "a decode/engine refactor changed the statistical core, or the "
+        "mask sampling stream shifted.  If the change is intentional "
+        "(verified against core/theory.py), re-pin GOLDEN_MEANS.")
+
+
+def test_golden_distribution_shape_pinned():
+    """Quantiles/std of one reference cell, pinned alongside the mean —
+    catches refactors that preserve the mean but reshape the law."""
+    res = _run("frc", 5, 0.3, "onestep", 2000)
+    assert res.std == pytest.approx(0.023830504847068164, rel=GOLDEN_RTOL)
+    assert res.q05 == pytest.approx(0.04489795918367346, rel=GOLDEN_RTOL)
+    assert res.q95 == pytest.approx(0.11877551020408128, rel=GOLDEN_RTOL)
+    assert res.p_zero == 0.0
+
+
+def test_golden_algorithmic_cell_pinned():
+    res = _run("bgc", 10, 0.3, "algorithmic", 600, iters=6)
+    assert res.mean == pytest.approx(0.0772582992048347, rel=GOLDEN_RTOL)
+
+
+# --------------------- theory cross-checks (tolerance bands) ----------------
+
+def _band(res, sigmas=4.0):
+    """Monte-Carlo band: sigmas * empirical standard error of the mean."""
+    return sigmas * res.std / np.sqrt(res.trials)
+
+
+def test_frc_onestep_matches_thm5_exact():
+    for delta in (0.1, 0.3):
+        res = _run("frc", 5, delta, "onestep", 2000)
+        r = int(round((1 - delta) * K))
+        want = T.thm5_expected_err1_frc_exact(K, 5, r) / K
+        assert res.mean == pytest.approx(want, abs=_band(res)), delta
+
+
+def test_frc_optimal_matches_thm6():
+    res = _run("frc", 5, 0.3, "optimal", 2000)
+    want = T.thm6_expected_err_frc(K, 5, 70) / K
+    # err(A) is heavy-tailed (most trials decode exactly); allow 5 SEs
+    assert res.mean == pytest.approx(want, abs=_band(res, sigmas=5.0))
+
+
+def test_bgc_onestep_matches_exact_expectation():
+    for delta in (0.1, 0.3):
+        res = _run("bgc", 10, delta, "onestep", 2000)
+        r = int(round((1 - delta) * K))
+        want = T.expected_err1_bgc_exact(K, 10, r) / K
+        # bgc also averages code randomness over code_draws=16 draws;
+        # the residual code-level variance widens the band
+        assert res.mean == pytest.approx(want, rel=0.08), delta
+
+
+def test_cyclic_onestep_within_frc_neighborhood():
+    """No closed form for cyclic in the paper; it is an s-regular
+    expander-like code, so its one-step error must sit within the
+    Thm-3-style O(delta k / s) scale — the band that pins its curve to
+    the right order."""
+    for delta in (0.1, 0.3):
+        res = _run("cyclic", 5, delta, "onestep", 2000)
+        scale = delta / ((1 - delta) * 5)  # (delta k / ((1-d) s)) / k
+        assert 0.05 * scale <= res.mean <= 2.0 * scale, delta
+
+
+def test_decoder_ordering_preserved():
+    """optimal <= algorithmic <= onestep on the same cell (Lemma 12
+    interpolation) — an engine refactor must not reorder the decoders."""
+    one = _run("bgc", 10, 0.3, "onestep", 600)
+    alg = _run("bgc", 10, 0.3, "algorithmic", 600, iters=6)
+    opt = _run("bgc", 10, 0.3, "optimal", 600)
+    assert opt.mean <= alg.mean + 1e-9
+    assert alg.mean <= one.mean + 1e-9

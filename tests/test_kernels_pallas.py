@@ -223,6 +223,7 @@ def test_property_onestep_full_mask_frc_exact(k, n, s, seed):
     assert_allclose(np.asarray(v), np.ones(k), atol=1e-5)
 
 
+@pytest.mark.slow  # ~20s: interpret-mode kernel per hypothesis example
 @settings(max_examples=15, deadline=None)
 @given(k=st.integers(20, 100), s=st.integers(2, 10),
        frac=st.floats(0.3, 1.0), seed=st.integers(0, 10_000))

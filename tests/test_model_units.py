@@ -127,6 +127,7 @@ class TestChunkedAttention:
                                    rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow  # dense-oracle comparisons: full MoE forwards
 class TestMoE:
     def _cfg(self, E=4, K=2, cf=8.0, shared=0):
         return ArchConfig(

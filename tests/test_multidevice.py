@@ -121,6 +121,8 @@ def test_sharded_coded_train_step_executes():
 
 import numpy as np  # noqa: E402  (used in asserts above)
 
+pytestmark = pytest.mark.slow  # subprocess 8-device sharded execution
+
 
 def test_grouped_moe_sharded_execution():
     """Grouped dispatch executes under a real data axis and matches the

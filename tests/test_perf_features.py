@@ -16,6 +16,8 @@ from repro.dist.sharding import DEFAULT_RULES, logical_to_pspec, \
 from repro.launch import perf as PERF
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # model-level e2e: full forwards + grads
+
 
 def _batch(cfg, B=2, S=32, seed=0):
     rng = np.random.default_rng(seed)

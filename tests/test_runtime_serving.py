@@ -20,7 +20,7 @@ from repro.configs import get_config
 from repro.models import build_model
 from repro.runtime import CorrelatedStragglers, DeadlineStragglers, \
     FixedFractionStragglers, IIDStragglers, make_straggler_model
-from repro.runtime.latency import simulate_wallclock
+from repro.sim import trace_from_model, wallclock_summary
 from repro.serving import Request, ServingEngine
 
 REPO = Path(__file__).resolve().parent.parent
@@ -118,8 +118,9 @@ def test_make_straggler_model_registry():
 
 def test_wallclock_deadline_beats_sync():
     m = DeadlineStragglers(deadline=1.5, tail_scale=0.4, seed=0)
-    sync = simulate_wallclock(m, 32, 50, policy="sync")
-    dead = simulate_wallclock(m, 32, 50, policy="deadline", deadline=1.5)
+    trace = trace_from_model(m, 50, 32)
+    sync = wallclock_summary(trace, policy="sync")
+    dead = wallclock_summary(trace, policy="deadline", deadline=1.5)
     assert dead["mean_step_time"] <= 1.5 + 1e-9
     assert sync["mean_step_time"] > dead["mean_step_time"]
     assert dead["mean_stragglers"] > 0  # the trade: time bought with error
@@ -161,6 +162,7 @@ def _run_cli(args, timeout=480):
                           capture_output=True, text=True, timeout=timeout)
 
 
+@pytest.mark.slow
 def test_train_cli_smoke(tmp_path):
     hist = tmp_path / "hist.json"
     out = _run_cli(["repro.launch.train", "--arch", "minicpm-2b", "--smoke",
@@ -173,6 +175,7 @@ def test_train_cli_smoke(tmp_path):
     assert np.isfinite(h[-1]["mean_ce"])
 
 
+@pytest.mark.slow
 def test_serve_cli_smoke():
     out = _run_cli(["repro.launch.serve", "--arch", "minicpm-2b", "--smoke",
                     "--requests", "3", "--max-new", "3",

@@ -1,0 +1,319 @@
+"""ClusterSim subsystem tests: traces, sync policies, the one-batched-
+decode-per-run invariant, frontiers, and parity of the deprecated
+runtime.latency.simulate_wallclock wrapper with the pre-ClusterSim loop."""
+
+import numpy as np
+import pytest
+
+from repro.core import codes as C
+from repro.core import decoding as D
+from repro.runtime import (BimodalStragglers, DeadlineStragglers,
+                           FixedFractionStragglers)
+from repro.sim import (AdaptiveDeadline, BackupPolicy, ClusterSim,
+                       DeadlinePolicy, LatencyTrace, WaitForAll, make_policy,
+                       make_trace, pareto_front, sweep_frontier,
+                       time_to_target_error, trace_from_model,
+                       wallclock_summary)
+
+
+# ------------------------------ traces --------------------------------------
+
+def test_trace_from_latency_model_matches_model_rows():
+    m = DeadlineStragglers(seed=3, tail_scale=0.4)
+    tr = trace_from_model(m, steps=7, n=16)
+    assert (tr.steps, tr.n) == (7, 16)
+    for t in range(7):
+        np.testing.assert_array_equal(tr.latencies[t], m.latencies(t, 16))
+
+
+def test_trace_from_mask_only_model_is_two_point():
+    m = FixedFractionStragglers(delta=0.25, seed=0)
+    tr = trace_from_model(m, steps=5, n=16, base=1.0, slow=3.0)
+    assert set(np.unique(tr.latencies)) == {1.0, 3.0}
+    for t in range(5):
+        np.testing.assert_array_equal(tr.latencies[t] == 1.0,
+                                      m.sample(t, 16))
+
+
+def test_trace_scaled_window_tile():
+    tr = make_trace("bimodal", steps=6, n=8, seed=1)
+    assert np.allclose(tr.scaled(2.0).latencies, 2.0 * tr.latencies)
+    assert tr.window(2, 5).steps == 3
+    tiled = tr.tile(15)
+    assert tiled.steps == 15
+    np.testing.assert_array_equal(tiled.latencies[6], tr.latencies[0])
+
+
+def test_trace_json_replay_roundtrip(tmp_path):
+    tr = make_trace("pareto", steps=4, n=6, seed=2, tail_scale=0.3)
+    p = tr.save(tmp_path / "trace.json")
+    back = LatencyTrace.load(p)
+    np.testing.assert_allclose(back.latencies, tr.latencies)
+    replayed = make_trace("replay", steps=10, path=p)
+    assert replayed.steps == 10
+    np.testing.assert_allclose(replayed.latencies[4], tr.latencies[0])
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        LatencyTrace(np.ones(5))          # not 2-D
+    with pytest.raises(ValueError):
+        LatencyTrace(-np.ones((2, 3)))    # negative latency
+    with pytest.raises(ValueError):
+        make_trace("replay")              # replay needs path
+    with pytest.raises(ValueError):
+        make_trace("pareto", steps=0, n=4)
+
+
+# ------------------------------ policies ------------------------------------
+
+def _trace(steps=50, n=32, seed=0):
+    return make_trace("pareto", steps=steps, n=n, seed=seed, tail_scale=0.4)
+
+
+@pytest.mark.parametrize("policy", [WaitForAll(), DeadlinePolicy(1.5),
+                                    BackupPolicy(0.9),
+                                    AdaptiveDeadline(target=0.15)])
+def test_policy_apply_equals_step_loop(policy):
+    """The vectorized apply must equal the incremental step() path the
+    trainer uses (same masks, same times, any policy state threading)."""
+    lat = _trace().latencies
+    masks_v, times_v, _ = policy.apply(lat)
+    state = None
+    for t in range(lat.shape[0]):
+        mask, tt, state = policy.step(lat[t], state)
+        np.testing.assert_array_equal(masks_v[t], mask)
+        assert times_v[t] == pytest.approx(tt, abs=0)
+
+
+def test_sync_policy_no_stragglers_max_time():
+    lat = _trace().latencies
+    masks, times, _ = WaitForAll().apply(lat)
+    assert masks.all()
+    np.testing.assert_allclose(times, lat.max(axis=1))
+
+
+def test_deadline_policy_semantics():
+    lat = _trace().latencies
+    masks, times, _ = DeadlinePolicy(deadline=1.6).apply(lat)
+    np.testing.assert_array_equal(masks, lat <= 1.6)
+    assert times.max() <= 1.6 + 1e-12
+
+
+def test_backup_policy_waits_for_quantile():
+    lat = _trace().latencies
+    masks, times, _ = BackupPolicy(quantile=0.9).apply(lat)
+    # at least 90% of workers report every step, and the step ends at
+    # the cut time
+    assert (masks.mean(axis=1) >= 0.9 - 1e-12).all()
+    np.testing.assert_allclose(times,
+                               np.quantile(lat, 0.9, axis=1,
+                                           method="higher"))
+
+
+def test_adaptive_deadline_steers_to_target():
+    """On a stationary trace the controller's straggler fraction
+    converges to the target band."""
+    target = 0.15
+    pol = AdaptiveDeadline(target=target, gain=0.5, d0=10.0)
+    lat = _trace(steps=300, n=64).latencies
+    masks, _, extras = pol.apply(lat)
+    frac = 1.0 - masks.mean(axis=1)
+    assert abs(frac[-100:].mean() - target) < 0.05
+    assert extras["deadlines"].shape == (300,)
+    # started way above the tail -> the controller tightened
+    assert extras["deadlines"][-1] < 10.0
+
+
+def test_make_policy_registry():
+    assert isinstance(make_policy("sync"), WaitForAll)
+    assert isinstance(make_policy("adaptive", target=0.2), AdaptiveDeadline)
+    p = DeadlinePolicy(2.0)
+    assert make_policy(p) is p
+    with pytest.raises(ValueError):
+        make_policy("nope")
+
+
+# ------------------------------ ClusterSim ----------------------------------
+
+def test_clustersim_exactly_one_batched_decode_per_run():
+    """The ISSUE acceptance invariant: a run of S steps performs exactly
+    one batched decode — no per-step Python decode loop."""
+    code = C.make_code("bgc", k=32, n=32, s=4, rng=np.random.default_rng(0))
+    sim = ClusterSim(code, _trace(steps=200, n=32), "deadline", s=4)
+    assert sim.engine.batch_calls == 0
+    res = sim.run()
+    assert sim.engine.batch_calls == 1
+    assert res.errors.shape == (200,)
+
+
+def test_clustersim_errors_match_scalar_decode_loop():
+    """Per-step errors from the single batched decode equal the scalar
+    per-step decode of each policy mask."""
+    code = C.make_code("frc", k=24, n=24, s=4, rng=np.random.default_rng(1))
+    tr = _trace(steps=40, n=24, seed=5)
+    for decoder in ("onestep", "optimal"):
+        res = ClusterSim(code, tr, DeadlinePolicy(1.6), decoder=decoder,
+                         s=4).run()
+        for t in (0, 7, 39):
+            mask = tr.latencies[t] <= 1.6
+            A = code.G[:, mask]
+            if decoder == "onestep":
+                want = D.err1(A, D.default_rho(code.k, int(mask.sum()), 4))
+            else:
+                want = D.err(A)
+            assert res.errors[t] == pytest.approx(want / code.k,
+                                                  rel=1e-8, abs=1e-10)
+
+
+def test_clustersim_result_summary_stats():
+    code = C.make_code("bgc", k=16, n=16, s=4, rng=np.random.default_rng(2))
+    res = ClusterSim(code, _trace(steps=30, n=16), "deadline", s=4).run()
+    assert res.total_time == pytest.approx(res.step_times.sum())
+    assert res.steps == 30
+    s = res.summary()
+    assert s["policy"] == "deadline" and s["mean_error"] >= 0.0
+    assert res.worst_stragglers >= res.mean_stragglers - 1e-9
+
+
+def test_clustersim_trace_code_mismatch_raises():
+    code = C.make_code("bgc", k=16, n=16, s=4, rng=np.random.default_rng(0))
+    with pytest.raises(ValueError):
+        ClusterSim(code, _trace(n=32), "sync")
+
+
+# ------------------------------ frontier ------------------------------------
+
+def test_sweep_frontier_grid_and_pareto():
+    tr = _trace(steps=60, n=24, seed=3)
+    pts = sweep_frontier(("frc", "bgc", "cyclic"),
+                         ("sync", "deadline", "backup"), tr, s=4)
+    assert len(pts) == 9
+    assert {(p.scheme, p.policy) for p in pts} == {
+        (s, p) for s in ("frc", "bgc", "cyclic")
+        for p in ("sync", "deadline", "backup")}
+    front = pareto_front(pts)
+    assert front
+    # non-domination: no point beats a front point on both axes
+    for f in front:
+        for p in pts:
+            assert not (p.mean_step_time < f.mean_step_time
+                        and p.mean_error < f.mean_error)
+    # sync never decodes with error under the optimal... use onestep:
+    # sync cells carry the largest step time in their scheme
+    for s in ("frc", "bgc", "cyclic"):
+        cell = {p.policy: p for p in pts if p.scheme == s}
+        assert cell["sync"].mean_step_time >= cell["deadline"].mean_step_time
+        assert cell["sync"].mean_stragglers == 0.0
+
+
+def test_time_to_target_inflates_with_error():
+    code = C.make_code("bgc", k=16, n=16, s=2, rng=np.random.default_rng(0))
+    res = ClusterSim(code, _trace(steps=20, n=16), "deadline", s=2).run()
+    assert time_to_target_error(res) >= res.total_time
+    # saturates rather than blowing up when error ~ 1
+    res.errors[:] = 2.0
+    assert time_to_target_error(res) == pytest.approx(100.0 * res.total_time)
+
+
+# --------------- deprecated simulate_wallclock parity -----------------------
+
+def _legacy_simulate_wallclock(model, n, steps, policy="deadline",
+                               deadline=1.5, compute_scale=1.0):
+    """Verbatim copy of the pre-ClusterSim runtime.latency loop."""
+    total, masks = 0.0, []
+    for t in range(steps):
+        lat_raw = model.latencies(t, n)
+        lat = lat_raw * compute_scale
+        if policy == "sync":
+            total += float(lat.max())
+        elif policy == "deadline":
+            total += float(min(deadline * compute_scale, lat.max()))
+        elif policy == "backup":
+            total += float(np.quantile(lat, 0.95))
+        masks.append(lat_raw * compute_scale
+                     <= deadline * compute_scale if policy == "deadline"
+                     else np.ones(n, bool))
+    masks = np.asarray(masks)
+    return {
+        "total_time": total,
+        "mean_step_time": total / steps,
+        "mean_stragglers": float((~masks).sum(1).mean()),
+        "worst_stragglers": int((~masks).sum(1).max()),
+    }
+
+
+@pytest.mark.parametrize("model", [
+    DeadlineStragglers(seed=11, tail_scale=0.4),
+    # mask-only model: the legacy loop used its unit-latency stub, NOT
+    # the two-point lift the co-simulation applies — parity must hold
+    FixedFractionStragglers(delta=0.25, seed=11),
+])
+@pytest.mark.parametrize("policy", ["sync", "deadline", "backup"])
+@pytest.mark.parametrize("scale", [1.0, 2.5])
+def test_wallclock_wrapper_parity_with_legacy_loop(model, policy, scale):
+    from repro.runtime.latency import simulate_wallclock
+    want = _legacy_simulate_wallclock(model, 24, 40, policy=policy,
+                                      deadline=1.5, compute_scale=scale)
+    with pytest.warns(DeprecationWarning):
+        got = simulate_wallclock(model, 24, 40, policy=policy,
+                                 deadline=1.5, compute_scale=scale)
+    assert got.keys() == want.keys()
+    for key in want:
+        assert got[key] == pytest.approx(want[key], rel=1e-12), key
+
+
+def test_wallclock_summary_bimodal_trade():
+    """The headline trade on the bimodal slow-node trace: deadline
+    aggregation bounds step time below wait-for-all."""
+    tr = trace_from_model(BimodalStragglers(slow_fraction=0.2, seed=0),
+                          steps=50, n=32)
+    sync = wallclock_summary(tr, policy="sync")
+    dead = wallclock_summary(tr, policy="deadline", deadline=1.5)
+    assert dead["mean_step_time"] <= 1.5 + 1e-9
+    assert sync["mean_step_time"] > dead["mean_step_time"]
+    assert dead["mean_stragglers"] > 0
+
+
+# --------------- training-loop trace hook (co-simulation) -------------------
+
+@pytest.mark.slow
+def test_trainer_trace_hook_logs_sim_time():
+    from repro import configs as CFG
+    from repro.models import build_model
+    from repro.optim import OptConfig
+    from repro.training import CodedTrainConfig, CodedTrainer
+
+    cfg = CFG.get_config("minicpm-2b", smoke=True)
+    model = build_model(cfg)
+    tr = make_trace("pareto", steps=5, n=8, seed=0, tail_scale=0.4)
+    trainer = CodedTrainer(
+        model,
+        CodedTrainConfig(code="bgc", n_workers=8, s=2, steps=5, seq_len=16,
+                         log_every=1,
+                         opt=OptConfig(lr=1e-3, warmup_steps=2,
+                                       total_steps=10)),
+        trace=tr, sync_policy=DeadlinePolicy(1.6))
+    out = trainer.run()
+    hist = out["history"]
+    assert len(hist) == 5
+    masks, times, _ = DeadlinePolicy(1.6).apply(tr.latencies)
+    for t, h in enumerate(hist):
+        assert h["step_time"] == pytest.approx(times[t])
+        assert h["stragglers"] == int((~masks[t]).sum())
+    assert hist[-1]["sim_time"] == pytest.approx(times.sum())
+
+
+def test_trainer_trace_hook_validation():
+    from repro import configs as CFG
+    from repro.models import build_model
+    from repro.training import CodedTrainConfig, CodedTrainer
+
+    cfg = CFG.get_config("minicpm-2b", smoke=True)
+    model = build_model(cfg)
+    with pytest.raises(ValueError):
+        CodedTrainer(model, CodedTrainConfig(n_workers=8),
+                     trace=make_trace("pareto", steps=3, n=4, seed=0))
+    with pytest.raises(ValueError):
+        CodedTrainer(model, CodedTrainConfig(n_workers=8),
+                     sync_policy="deadline")

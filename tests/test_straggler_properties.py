@@ -1,0 +1,147 @@
+"""Property tests for the straggler layer (ISSUE 2 satellite).
+
+Invariants:
+  * every model is deterministic in (seed, step) — the SPMD
+    no-communication contract — for masks AND latencies;
+  * DeadlineStragglers.sample is literally `latencies <= deadline`;
+  * sample_straggler_masks puts exactly num_stragglers in every row and
+    matches the scalar sample_straggler_mask distributionally (uniform
+    marginals over positions).
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simulate import sample_straggler_mask, sample_straggler_masks
+from repro.runtime.straggler import (BimodalStragglers, CorrelatedStragglers,
+                                     DeadlineStragglers,
+                                     FixedFractionStragglers, IIDStragglers,
+                                     NoStragglers, StragglerModel)
+
+MODEL_BUILDERS = {
+    "none": lambda seed: NoStragglers(),
+    "iid": lambda seed: IIDStragglers(delta=0.3, seed=seed),
+    "fixed": lambda seed: FixedFractionStragglers(delta=0.25, seed=seed),
+    "deadline": lambda seed: DeadlineStragglers(seed=seed, tail_scale=0.4),
+    "correlated": lambda seed: CorrelatedStragglers(pod_size=4, p_pod=0.1,
+                                                    seed=seed),
+    "bimodal": lambda seed: BimodalStragglers(slow_fraction=0.2, seed=seed),
+}
+
+
+# ----------------------- determinism in (seed, step) ------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(name=st.sampled_from(sorted(MODEL_BUILDERS)),
+       seed=st.integers(0, 2**31 - 1),
+       step=st.integers(0, 10_000),
+       n=st.integers(1, 96))
+def test_models_deterministic_in_seed_step(name, seed, step, n):
+    """Two independently constructed models with the same seed agree on
+    every (step, n) — no hidden per-process or call-order state."""
+    a = MODEL_BUILDERS[name](seed)
+    b = MODEL_BUILDERS[name](seed)
+    ma = a.sample(step, n)
+    # interleave extra draws to catch stateful RNG misuse
+    b.sample(step + 1, n)
+    b.latencies(step + 3, n)
+    mb = b.sample(step, n)
+    assert ma.dtype == np.bool_ and ma.shape == (n,)
+    np.testing.assert_array_equal(ma, mb)
+    np.testing.assert_array_equal(a.latencies(step, n),
+                                  b.latencies(step, n))
+
+
+@settings(max_examples=20, deadline=None)
+@given(name=st.sampled_from(["deadline", "bimodal"]),
+       seed=st.integers(0, 2**31 - 1),
+       n=st.integers(4, 64))
+def test_different_steps_give_different_draws(name, seed, n):
+    """Sanity: the (seed, step) keying actually varies with step."""
+    m = MODEL_BUILDERS[name](seed)
+    lat = np.stack([m.latencies(t, n) for t in range(8)])
+    assert not all(np.array_equal(lat[0], lat[t]) for t in range(1, 8))
+    m2 = MODEL_BUILDERS["iid"](seed)
+    masks = np.stack([m2.sample(t, 64) for t in range(8)])
+    assert not all(np.array_equal(masks[0], masks[t]) for t in range(1, 8))
+
+
+# ----------------------- deadline model consistency -------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), step=st.integers(0, 1000),
+       n=st.integers(1, 128), deadline=st.floats(0.5, 4.0),
+       tail=st.floats(0.01, 1.0))
+def test_deadline_sample_equals_latency_threshold(seed, step, n, deadline,
+                                                  tail):
+    m = DeadlineStragglers(deadline=deadline, tail_scale=tail, seed=seed)
+    np.testing.assert_array_equal(m.sample(step, n),
+                                  m.latencies(step, n) <= deadline)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(8, 64))
+def test_bimodal_slow_set_is_persistent(seed, n):
+    m = BimodalStragglers(slow_fraction=0.25, seed=seed)
+    slow = m.slow_nodes(n)
+    assert slow.sum() == int(round(0.25 * n))
+    np.testing.assert_array_equal(slow, m.slow_nodes(n))
+    # slow nodes are slower on every step (jitter is small vs the gap)
+    for step in (0, 3):
+        lat = m.latencies(step, n)
+        if slow.any() and (~slow).any():
+            assert lat[slow].min() > lat[~slow].max()
+    np.testing.assert_array_equal(m.sample(5, n), m.latencies(5, n) <= 1.5)
+
+
+# ----------------------- batched mask sampling ------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 128), trials=st.integers(1, 64),
+       frac=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_sample_straggler_masks_exact_count_per_row(n, trials, frac, seed):
+    num = int(frac * n)
+    rng = np.random.default_rng(seed)
+    masks = sample_straggler_masks(n, num, trials, rng)
+    assert masks.shape == (trials, n) and masks.dtype == np.bool_
+    np.testing.assert_array_equal((~masks).sum(axis=1),
+                                  np.full(trials, num))
+
+
+def test_sample_straggler_masks_matches_scalar_distribution():
+    """Batched and scalar samplers draw from the same distribution:
+    per-position straggle frequency is uniform (= num/n) for both, and
+    the two empirical marginals agree within Monte-Carlo error."""
+    n, num, trials = 20, 5, 8000
+    batched = sample_straggler_masks(n, num, trials,
+                                     np.random.default_rng(0))
+    rng = np.random.default_rng(1)
+    scalar = np.stack([sample_straggler_mask(n, num, rng)
+                       for _ in range(trials)])
+    p = num / n
+    freq_b = (~batched).mean(axis=0)
+    freq_s = (~scalar).mean(axis=0)
+    # 4-sigma band for a Bernoulli(p) mean over `trials` draws
+    band = 4 * np.sqrt(p * (1 - p) / trials)
+    np.testing.assert_allclose(freq_b, p, atol=band)
+    np.testing.assert_allclose(freq_s, p, atol=band)
+    np.testing.assert_allclose(freq_b, freq_s, atol=2 * band)
+    # pairwise exchangeability spot-check: P(i and j both straggle)
+    pair = num * (num - 1) / (n * (n - 1))
+    got_pair = ((~batched[:, 0]) & (~batched[:, 1])).mean()
+    assert abs(got_pair - pair) <= 4 * np.sqrt(pair * (1 - pair) / trials)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 64), seed=st.integers(0, 2**31 - 1))
+def test_sample_straggler_masks_edge_counts(n, seed):
+    rng = np.random.default_rng(seed)
+    assert sample_straggler_masks(n, 0, 3, rng).all()
+    assert not sample_straggler_masks(n, n, 3, rng).any()
+
+
+def test_base_model_latency_contract():
+    """Mask-only models inherit unit latencies (the lift point for
+    sim.traces.trace_from_model)."""
+    assert np.array_equal(StragglerModel().latencies(7, 5), np.ones(5))
+    assert np.array_equal(NoStragglers().latencies(7, 5), np.ones(5))
