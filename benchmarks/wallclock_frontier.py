@@ -14,6 +14,13 @@ Two parts:
      per-step decode loop (slice + scalar decode every step, the
      pre-ClusterSim dataflow) by >= 10x.
 
+  3. Device validation — frontier corner cells re-run through
+     ClusterSim.run_distributed(): the same masks decoded by the REAL
+     shard_map coded all-reduce (DESIGN.md §9) with basis task
+     gradients, whose on-device errors must match the analytic ones.
+     Run under XLA_FLAGS=--xla_force_host_platform_device_count=8 for
+     a true multi-device mesh; one device still validates the path.
+
 Artifacts: artifacts/bench/wallclock_frontier.{json,csv}.
 """
 
@@ -99,6 +106,21 @@ def run(n: int = 64, steps: int = 400, s: int = 8, seed: int = 0,
           f"speedup={speedup:.1f}x  (decode calls: {batch_calls}, "
           f"max err dev {err_dev:.2e})")
 
+    # ---- 3. device validation: run_distributed vs the analytic path ----
+    vcode = codes.make_code("frc", k=n, n=n, s=s,
+                            rng=np.random.default_rng(seed))
+    vtrace = trace.window(0, min(steps, 100))
+    dist_devs = {}
+    for decoder in ("onestep", "optimal"):
+        vsim = ClusterSim(vcode, vtrace, "deadline", decoder=decoder, s=s)
+        vres = vsim.run_distributed()
+        dev = float(np.abs(vres.errors
+                           - vres.extras["analytic_errors"]).max())
+        dist_devs[decoder] = dev
+        n_dev = vres.extras["n_devices"]
+    print(f"device validation (frc, deadline, {n_dev} device(s)): "
+          + "  ".join(f"{d}: max dev {v:.2e}" for d, v in dist_devs.items()))
+
     n_cells = len({(r["scheme"], r["policy"]) for r in rows})
     checks = {
         "grid_ge_3x3": bool(len(set(SCHEMES)) >= 3
@@ -108,6 +130,9 @@ def run(n: int = 64, steps: int = 400, s: int = 8, seed: int = 0,
         "speedup_ge_10x": bool(speedup >= 10.0),
         "errors_match_loop_1e-9": bool(err_dev <= 1e-9),
         "times_match_loop_1e-9": bool(time_dev <= 1e-9),
+        # fp32 on-device vs fp64 analytic: 1e-4 absorbs the cast only
+        "dist_errors_match_analytic_1e-4": bool(
+            max(dist_devs.values()) <= 1e-4),
     }
     payload = {
         "trace": {"source": trace.source, "steps": steps, "n": n},
@@ -116,6 +141,8 @@ def run(n: int = 64, steps: int = 400, s: int = 8, seed: int = 0,
         "gate": {"n": gate_n, "steps": gate_steps, "loop_s": t_loop,
                  "batched_s": t_batched, "speedup": speedup,
                  "max_err_dev": err_dev},
+        "dist_validation": {"n_devices": int(n_dev),
+                            "max_dev_by_decoder": dist_devs},
         "checks": checks,
     }
     save_json("wallclock_frontier", payload)

@@ -57,8 +57,11 @@ class CodedAssignment:
         if w.shape != (self.n,):
             raise ValueError(f"w shape {w.shape} != ({self.n},)")
         denom = float(self.k * rows_per_slot)
-        sw = (w[:, None] * self.coeffs) / denom
-        return np.where(self.task_ids >= 0, sw, 0.0).astype(np.float32)
+        # stays float64: the G coefficients are exact (0/1 codes) and the
+        # consumers cast at the device boundary — the fp64 differential
+        # tests need the host-side weights unrounded
+        sw = (w[:, None] * self.coeffs.astype(np.float64)) / denom
+        return np.where(self.task_ids >= 0, sw, 0.0)
 
     def row_weights(self, w: np.ndarray, rows_per_slot: int) -> np.ndarray:
         """Flat per-row weights of shape (n * slots * rows_per_slot,)."""

@@ -30,6 +30,7 @@ __all__ = [
     "algorithmic_weights",
     "algorithmic_error_curve",
     "decode_weights",
+    "exact_decode_renorm",
     "apply_weights",
     # batched (mask-ensemble) variants — consumed by core.engine
     "err1_batch",
@@ -382,6 +383,25 @@ def decode_weights(G: np.ndarray, mask: np.ndarray, method: str = "onestep",
         cover = (G[:, mask] != 0).sum()
         return mask * (k / max(cover, 1))
     raise ValueError(f"unknown decode method {method!r}")
+
+
+def exact_decode_renorm(G: np.ndarray, W: np.ndarray) -> np.ndarray:
+    """Rescale decode weights so sum(G @ w) == k (unbiased-ish decode).
+
+    THE renorm rule shared by the fused trainer (scalar w) and the coded
+    all-reduce trace path ([S, n] ensembles) — one implementation so the
+    two weight streams cannot drift.  Rows whose decode sum is tiny
+    (all-straggler masks) are returned unchanged.
+    """
+    G = _as2d(G)
+    k = G.shape[0]
+    W = np.asarray(W, dtype=np.float64)
+    if W.ndim == 1:
+        tot = float((G @ W).sum())
+        return W * (k / tot) if tot > 1e-6 else W
+    tot = (G @ W.T).sum(axis=0)
+    scale = np.where(tot > 1e-6, k / np.where(tot > 1e-6, tot, 1.0), 1.0)
+    return W * scale[:, None]
 
 
 def apply_weights(partials: np.ndarray, w: np.ndarray) -> np.ndarray:

@@ -63,6 +63,7 @@ class CodedDataPipeline:
     def __init__(self, assignment: CodedAssignment, cfg: PipelineConfig):
         self.asg = assignment
         self.cfg = cfg
+        self._lane_mask_cache: Dict[tuple, np.ndarray] = {}
 
     @property
     def physical_batch(self) -> int:
@@ -99,8 +100,52 @@ class CodedDataPipeline:
                     labels[row : row + T] = data[:, 1:]
                 row += T
 
-        weights = self.asg.row_weights(decode_w, T).astype(np.float32)
+        weights = self.asg.row_weights(decode_w, T)
         return {"tokens": tokens, "labels": labels, "loss_weight": weights}
+
+    def device_batch_for_step(self, step: int, decode_w: np.ndarray,
+                              partition) -> Dict[str, np.ndarray]:
+        """The coded batch re-laid-out as per-device microbatches.
+
+        partition: a dist.coded_allreduce.DevicePartition for this
+        assignment's n workers.  Every leaf leads with the device
+        dimension D; each device's microbatch holds the rows of its
+        ``lanes`` workers in lane order (R = lanes * slots * T rows per
+        device).  Padding lanes (n not a multiple of D) carry zero
+        tokens with zero loss_weight, so all devices see identical
+        shapes and contribute exact zeros to the coded psum.
+        """
+        if partition.n != self.asg.n:
+            raise ValueError(f"partition has n={partition.n} workers, "
+                             f"assignment has n={self.asg.n}")
+        flat = self.batch_for_step(step, decode_w)
+        rpw = self.asg.slots * self.cfg.rows_per_slot
+        D, L = partition.n_devices, partition.lanes
+        ids = partition.worker_ids                          # [D, L]
+        src = np.where(ids >= 0, ids, 0)[..., None] * rpw + np.arange(rpw)
+        src = src.reshape(-1)                               # [D*L*rpw]
+        row_ok = np.repeat(partition.lane_mask.reshape(-1), rpw)
+        out: Dict[str, np.ndarray] = {}
+        for name, x in flat.items():
+            v = x[src]
+            v[~row_ok] = 0
+            out[name] = v.reshape((D, L * rpw) + x.shape[1:])
+        if not partition.lane_mask.all():
+            # ragged n/D: zero the padding-lane rows out of the models'
+            # per-row CE (they already carry zero loss_weight, but the
+            # mean_ce metric would otherwise average in garbage rows —
+            # the trainer rescales by padded_n/n to undo the dilution).
+            # Step-independent -> built once per (partition, seq) shape.
+            seq = flat["labels"].shape[1]
+            key = (D, L, partition.n, rpw, seq)
+            lm = self._lane_mask_cache.get(key)
+            if lm is None:
+                lm = np.ascontiguousarray(np.broadcast_to(
+                    row_ok.reshape(D, L * rpw)[..., None],
+                    (D, L * rpw, seq)), dtype=np.float32)
+                self._lane_mask_cache[key] = lm
+            out["loss_mask"] = lm
+        return out
 
     def uncoded_batch_for_step(self, step: int) -> Dict[str, np.ndarray]:
         """The k*T unique examples with uniform mean weights (baseline)."""

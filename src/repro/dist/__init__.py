@@ -17,14 +17,26 @@ from .sharding import (  # noqa: F401
     use_mesh,
     use_rules,
 )
+from .coded_allreduce import (  # noqa: F401
+    CodedAllReduce,
+    DevicePartition,
+    make_worker_mesh,
+    partition_workers,
+)
+from . import coded_allreduce  # noqa: F401
 from . import sharding  # noqa: F401
 
 __all__ = [
     "DEFAULT_RULES",
+    "CodedAllReduce",
+    "DevicePartition",
+    "coded_allreduce",
     "constrain",
     "logical_to_pspec",
+    "make_worker_mesh",
     "param_pspec",
     "param_shardings",
+    "partition_workers",
     "rules_for",
     "use_mesh",
     "use_rules",

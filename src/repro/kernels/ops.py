@@ -23,7 +23,10 @@ from .batched_decode import (
     batched_onestep_decode as _batched_onestep_pallas,
     batched_onestep_decode_ell as _batched_onestep_ell_pallas,
 )
-from .coded_accumulate import coded_accumulate as _accumulate_pallas
+from .coded_accumulate import (
+    coded_accumulate as _accumulate_pallas,
+    coded_accumulate_batched as _accumulate_batched_pallas,
+)
 from .flash_attention import flash_attention as _flash_pallas
 from .onestep_decode import onestep_decode as _onestep_pallas
 from .rglru_scan import rglru_scan as _rglru_pallas
@@ -31,7 +34,8 @@ from .rwkv6_wkv import rwkv6_wkv as _wkv_pallas
 
 __all__ = [
     "attention", "rglru_scan", "rwkv6_wkv",
-    "coded_accumulate", "onestep_decode", "algorithmic_decode",
+    "coded_accumulate", "coded_accumulate_batched",
+    "onestep_decode", "algorithmic_decode",
     "batched_onestep_decode", "batched_onestep_decode_ell",
     "batched_algorithmic_decode",
 ]
@@ -69,6 +73,16 @@ def coded_accumulate(grads, weights, *, impl="pallas", bp=2048):
     if impl == "xla":
         return _ref.coded_accumulate_ref(grads, weights)
     return _accumulate_pallas(grads, weights, bp=bp, interpret=_interp(impl))
+
+
+def coded_accumulate_batched(grads, weights, *, impl="pallas",
+                             bb=128, bk=512, bp=2048):
+    """out [B, P] = weights [B, k] @ grads [k, P] — the coded
+    all-reduce's on-device weighted accumulate over a weight-row batch."""
+    if impl == "xla":
+        return _ref.coded_accumulate_batched_ref(grads, weights)
+    return _accumulate_batched_pallas(grads, weights, bb=bb, bk=bk, bp=bp,
+                                      interpret=_interp(impl))
 
 
 def onestep_decode(G, mask, rho, *, impl="pallas", bk=512, bn=512):

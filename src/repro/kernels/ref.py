@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 __all__ = [
     "attention_ref", "rglru_scan_ref", "wkv_ref",
-    "coded_accumulate_ref", "onestep_decode_ref", "algorithmic_decode_ref",
+    "coded_accumulate_ref", "coded_accumulate_batched_ref",
+    "onestep_decode_ref", "algorithmic_decode_ref",
     "batched_onestep_decode_ref", "batched_algorithmic_decode_ref",
 ]
 
@@ -92,6 +93,18 @@ def coded_accumulate_ref(grads: jax.Array, weights: jax.Array) -> jax.Array:
     """Sum_i w_i * g_i over stacked task gradients.  grads [k, P], w [k]."""
     return jnp.einsum("k,kp->p", weights.astype(jnp.float32),
                       grads.astype(jnp.float32))
+
+
+def coded_accumulate_batched_ref(grads: jax.Array,
+                                 weights: jax.Array) -> jax.Array:
+    """weights @ grads per weight row.  grads [k, P], weights [B, k].
+
+    Computes in fp32 like the kernel, but follows the inputs up to fp64
+    when x64 is enabled (the differential oracle path).
+    """
+    dt = jnp.promote_types(jnp.promote_types(grads.dtype, weights.dtype),
+                           jnp.float32)
+    return jnp.einsum("bk,kp->bp", weights.astype(dt), grads.astype(dt))
 
 
 def onestep_decode_ref(G: jax.Array, mask: jax.Array, rho: float) -> jax.Array:

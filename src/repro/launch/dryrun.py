@@ -1,11 +1,15 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
-# ^ MUST precede every other import (jax locks the device count on first
-# init).  This module is the ONLY place the 512-device placeholder world is
-# created; smoke tests and benchmarks see the real single CPU device.
-
 """Multi-pod dry-run: prove the distribution config is coherent.
+
+XLA_FLAGS precedence: this module needs a 512-device placeholder world
+(jax locks the host device count on first init, so the flag must be set
+before any jax import).  A caller that already exported XLA_FLAGS wins
+VERBATIM — e.g. the 8-device coded-allreduce test lane sets
+``--xla_force_host_platform_device_count=8`` and can then import dryrun
+helpers in the same process without its world being clobbered.  Only
+when no XLA_FLAGS are present does importing this module install the
+512-device default (in that case production-mesh cells run as designed;
+under a caller's smaller world ``make_production_mesh`` raises with a
+clear message rather than silently mis-meshing).
 
 For every (architecture x input-shape x mesh) cell this lowers and
 compiles the real step function (train_step / prefill / decode_step)
@@ -29,6 +33,14 @@ Usage:
         --shape train_4k --mesh single
     PYTHONPATH=src python -m repro.launch.dryrun --all   # 40 cells x 2 meshes
 """
+
+import os
+
+# Must precede every other import (jax locks the device count on first
+# init).  setdefault, not assignment: a pre-set XLA_FLAGS is respected —
+# see the precedence note in the module docstring.
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
 
 import argparse
 import dataclasses

@@ -55,6 +55,17 @@ def main(argv=None) -> int:
                     help="inject a hard worker failure at this step")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--dist-mode", default="fused",
+                    choices=["fused", "coded_allreduce"],
+                    help="'coded_allreduce' runs the shard_map coded "
+                         "aggregation over a 1-D worker mesh spanning all "
+                         "local devices (DESIGN.md §9)")
+    ap.add_argument("--trace", default="none",
+                    choices=["none", "pareto", "bimodal"],
+                    help="drive straggler masks from a latency trace "
+                         "through --sync-policy instead of --straggler")
+    ap.add_argument("--sync-policy", default="deadline",
+                    choices=["sync", "deadline", "backup", "adaptive"])
     ap.add_argument("--mesh", default="none", choices=["none", "debug"],
                     help="'debug' builds a small host mesh (needs "
                          "XLA_FLAGS=--xla_force_host_platform_device_count)")
@@ -78,6 +89,14 @@ def main(argv=None) -> int:
     straggler = (make_straggler_model(args.straggler,
                                       **STRAGGLER_PRESETS[args.straggler])
                  if args.straggler != "none" else None)
+    trace = None
+    if args.trace != "none":
+        from repro.sim.traces import make_trace
+        trace = make_trace(args.trace, steps=args.steps, n=args.workers,
+                           seed=args.seed)
+        straggler = None    # masks come from the trace + sync policy
+        print(f"[train] trace: {args.trace} x {args.steps} steps, "
+              f"policy={args.sync_policy}")
     faults = None
     if args.fail_step is not None:
         faults = FaultInjector([FaultPlan(step=args.fail_step,
@@ -90,9 +109,14 @@ def main(argv=None) -> int:
         opt=OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                       total_steps=args.steps),
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-        log_every=max(args.steps // 10, 1))
+        log_every=max(args.steps // 10, 1), dist_mode=args.dist_mode)
     trainer = CodedTrainer(model, tcfg, straggler_model=straggler,
-                           fault_injector=faults, mesh=mesh)
+                           fault_injector=faults, mesh=mesh,
+                           trace=trace,
+                           sync_policy=args.sync_policy if trace else None)
+    if trainer.allreduce is not None:
+        print(f"[train] coded_allreduce: {trainer.allreduce.n_devices} "
+              f"device(s) x {trainer.allreduce.partition.lanes} lane(s)")
     out = trainer.run()
 
     for h in out["history"]:

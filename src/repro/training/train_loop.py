@@ -21,6 +21,15 @@ policy (``sync_policy=``, default a 1.5s deadline) instead of the
 straggler model, and logs the modelled wall-clock per step
 (``step_time`` / cumulative ``sim_time`` in history) — the ClusterSim
 dataflow riding the real training loop.
+
+Distributed execution: ``dist_mode="coded_allreduce"`` replaces step 3-4
+with the shard_map path of ``dist.coded_allreduce`` (DESIGN.md §9): the
+batch is sliced into per-device microbatches (each device computes only
+its workers' assigned task-gradients), and decoding happens as the
+weighted psum over the 1-D worker mesh.  With a trace attached, the
+whole run's masks are mapped through the policy up front and decoded in
+ONE DecodeEngine.decode_batch call (the ClusterSim invariant); per-step
+weights are then row lookups.
 """
 
 from __future__ import annotations
@@ -66,6 +75,7 @@ class CodedTrainConfig:
     log_every: int = 10
     exact_decode_renorm: bool = True  # rescale w so sum(G@w)=k (unbiased-ish)
     decode_cache_size: int = 512      # mask->weights LRU entries (engine)
+    dist_mode: str = "fused"          # fused | coded_allreduce (DESIGN.md §9)
 
 
 class CodedTrainer:
@@ -78,6 +88,12 @@ class CodedTrainer:
         self.straggler = straggler_model or NoStragglers()
         self.faults = fault_injector or FaultInjector()
         self.mesh = mesh
+        if tcfg.dist_mode not in ("fused", "coded_allreduce"):
+            raise ValueError(f"dist_mode {tcfg.dist_mode!r} not in "
+                             f"('fused', 'coded_allreduce')")
+        if tcfg.dist_mode == "coded_allreduce" and mesh is not None:
+            raise ValueError("dist_mode='coded_allreduce' builds its own 1-D "
+                             "worker mesh; mesh= is only for the fused path")
         self.rng = np.random.default_rng(tcfg.seed)
         # trace-driven co-simulation (sim.cluster): trace rows -> masks +
         # modelled step times through a sync policy
@@ -102,6 +118,11 @@ class CodedTrainer:
         is attached, else the straggler model with no time model."""
         if self.trace is None:
             return self.straggler.sample(step, n), None
+        if self._trace_masks is not None:   # dist path: precomputed schedule
+            i = step % self._trace_masks.shape[0]
+            t = float(self._trace_times[i])
+            self.sim_time += t
+            return self._trace_masks[i], t
         lat = self.trace.latencies[step % self.trace.steps]
         if n != lat.shape[0]:   # elastic shrink: simulate surviving workers
             lat = lat[:n]
@@ -124,6 +145,31 @@ class CodedTrainer:
             self.assignment,
             PipelineConfig(vocab=self.model.cfg.vocab, seq_len=t.seq_len,
                            rows_per_slot=t.rows_per_slot, seed=t.seed))
+        self.allreduce = None
+        self._trace_masks = self._trace_times = self._trace_weights = None
+        if t.dist_mode == "coded_allreduce":
+            from ..dist.coded_allreduce import CodedAllReduce
+            self.allreduce = CodedAllReduce(
+                self.code, engine=self.engine, assignment=self.assignment)
+            if self.trace is not None:
+                self._prepare_trace_schedule()
+
+    def _prepare_trace_schedule(self) -> None:
+        """Distributed path: map the WHOLE trace through the sync policy
+        and decode every step's mask in ONE decode_batch call (the
+        ClusterSim invariant — ``engine.batch_calls`` advances by 1 per
+        trace/engine, never once per step).  Recomputed on elastic
+        re-coding since the engine is rebuilt with the code."""
+        lat = self.trace.latencies
+        n = self.assignment.n
+        if lat.shape[1] != n:   # elastic shrink: surviving workers
+            lat = lat[:, :n]
+        masks, times, _ = self.sync_policy.apply(lat)
+        self._trace_masks = masks
+        self._trace_times = times
+        self._trace_weights = self.allreduce.weights_for_masks(
+            masks, method=self.tcfg.decoder,
+            renorm=self.tcfg.exact_decode_renorm)
 
     # ------------- jitted step -------------
     def _make_step_fn(self) -> Callable:
@@ -134,6 +180,32 @@ class CodedTrainer:
                               opt_cfg.lr, opt_cfg.total_steps,
                               opt_cfg.warmup_steps, opt_cfg.min_ratio,
                               opt_cfg.decay_frac)
+
+        if self.tcfg.dist_mode == "coded_allreduce":
+            vg = self.allreduce.value_and_grad(model.loss_fn, jit=False)
+            part = self.allreduce.partition
+            D = part.n_devices
+            # padding-lane rows are masked out of the per-row CE (see
+            # device_batch_for_step) but still counted by row.mean();
+            # padded_n/n undoes the dilution so mean_ce matches fused
+            ce_fix = part.padded_n / part.n
+
+            def step_fn(params, opt_state, batch):
+                (loss, metrics), grads = vg(params, batch)
+                # psum sums scalar aux over devices: means divide back
+                metrics = dict(metrics)
+                for key in ("mean_ce", "aux_loss"):
+                    if key in metrics:
+                        metrics[key] = metrics[key] / D
+                if "mean_ce" in metrics:
+                    metrics["mean_ce"] = metrics["mean_ce"] * ce_fix
+                lr = sched(opt_state["step"])
+                params, opt_state, om = adamw_update(params, grads, opt_state,
+                                                     opt_cfg, lr)
+                metrics = dict(metrics, **om)
+                return params, opt_state, metrics
+
+            return jax.jit(step_fn, donate_argnums=(0, 1))
 
         def step_fn(params, opt_state, batch):
             (loss, metrics), grads = jax.value_and_grad(
@@ -155,11 +227,8 @@ class CodedTrainer:
         """
         t = self.tcfg
         w = self.engine.decode(mask, method=t.decoder)
-        if t.exact_decode_renorm and w.any():
-            v = self.code.G @ w
-            tot = float(v.sum())
-            if tot > 1e-6:
-                w = w * (self.code.k / tot)
+        if t.exact_decode_renorm:
+            w = DEC.exact_decode_renorm(self.code.G, w)
         return w
 
     # ------------- state init / restore -------------
@@ -195,12 +264,23 @@ class CodedTrainer:
                 if plan is not None:
                     alive = self.faults.alive_count(n0)
                     self._build_code(max(alive, 2))
+                    # step_fn closures capture partition-derived scalars
+                    # (ce_fix, D) — rebuild with the new code
+                    self._step_fn = self._make_step_fn()
 
                 # --- straggler mask -> decode weights -> coded batch ---
                 mask, step_time = self._mask_and_time(step, self.assignment.n)
-                w = self.decode_weights_for(mask)
-                batch_np = self.pipeline.batch_for_step(step, w)
-                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+                if self._trace_weights is not None:
+                    w = self._trace_weights[step % self._trace_weights.shape[0]]
+                else:
+                    w = self.decode_weights_for(mask)
+                if self.allreduce is not None:
+                    batch_np = self.pipeline.device_batch_for_step(
+                        step, w, self.allreduce.partition)
+                    batch = self.allreduce.shard_batch(batch_np)
+                else:
+                    batch_np = self.pipeline.batch_for_step(step, w)
+                    batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
 
                 state["params"], state["opt"], metrics = self._step_fn(
                     state["params"], state["opt"], batch)
@@ -256,14 +336,18 @@ def explicit_master_decode_grads(model: Model, params, trainer: CodedTrainer,
         # per-row coefficients G[i,j] / (k*T): the worker's coded combo
         coeff = np.repeat(
             np.where(asg.task_ids[j] >= 0, asg.coeffs[j], 0.0), T) / (asg.k * T)
-        sl["loss_weight"] = jnp.asarray(coeff.astype(np.float32))
+        sl["loss_weight"] = jnp.asarray(coeff)  # f64 host-side; the model
+        # casts at the device boundary (f32 unless x64 is enabled)
         loss, _ = model.loss_fn(params, sl)
         return loss
 
     partials = [jax.grad(worker_loss)(params, j) for j in range(asg.n)]
-    flat = [jnp.concatenate([g.reshape(-1).astype(jnp.float32)
-                             for g in jax.tree_util.tree_leaves(p)])
+    # promote to at least fp32 but follow fp64 grads (x64 differential
+    # tests compare the shard_map path against this oracle at 1e-10)
+    flat = [jnp.concatenate(
+        [g.reshape(-1).astype(jnp.promote_types(g.dtype, jnp.float32))
+         for g in jax.tree_util.tree_leaves(p)])
             for p in partials]
     stacked = jnp.stack(flat)                      # [n, P]
-    decoded = jnp.asarray(w, jnp.float32) @ stacked
+    decoded = jnp.asarray(w, stacked.dtype) @ stacked
     return decoded, w
