@@ -1,0 +1,156 @@
+"""Throughput-regression gate for the CI bench lane.
+
+Compares freshly generated ``artifacts/bench/*.json`` against the
+committed baselines in ``benchmarks/baselines/`` and fails (exit 1)
+when any tracked throughput metric regresses by more than the
+tolerance (default 25%).
+
+Only MACHINE-NORMALIZED metrics are compared: every tracked metric is a
+speedup ratio (batched path vs reference loop, measured in the same
+process on the same machine), so a slower CI runner shifts both sides
+equally and the gate tracks genuine code regressions, not runner
+lottery.  Hard floors (the E10/E11 ">= 10x batched" acceptance) are
+enforced by the benchmark modules themselves; this gate catches slower
+drift that stays above those floors.
+
+Baselines store ONLY the tracked metrics (not whole artifacts), so a
+pinned file cannot drift out of sync with derived fields.  Because the
+ratios still jitter run to run, the documented pin flow min-merges
+several runs into a conservative floor:
+
+    PYTHONPATH=src python -m benchmarks.mc_throughput --trials 300
+    PYTHONPATH=src python -m benchmarks.wallclock_frontier --steps 100
+    python -m benchmarks.check_regression --update          # first pin
+    # ... re-run the benchmarks a couple more times, then after each:
+    python -m benchmarks.check_regression --update --keep-min
+
+``--update`` alone replaces the baselines with the current run;
+``--keep-min`` keeps the smaller of (baseline, current) per metric.
+The CI check itself:
+
+    python -m benchmarks.check_regression [--tolerance 0.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ARTIFACTS = Path("artifacts/bench")
+BASELINES = Path(__file__).resolve().parent / "baselines"
+
+# metrics whose baseline speedup sits below this are reference cells
+# (e.g. batched pinv vs loop, ~1x by design) where run-to-run BLAS noise
+# exceeds any real signal: report them, do not gate them
+GATE_MIN_BASELINE = 2.0
+
+
+def _extract_mc_throughput(payload: dict) -> dict:
+    rows = payload["rows"]
+    return {"speedup[" + r["decoder"] + "]": float(r["speedup"]) for r in rows}
+
+
+def _extract_wallclock_frontier(payload: dict) -> dict:
+    return {"speedup[gate]": float(payload["gate"]["speedup"])}
+
+
+# (file stem, description, payload -> {metric: speedup}) per benchmark
+TRACKED = (
+    ("mc_throughput", "E10 batched decode speedups", _extract_mc_throughput),
+    ("wallclock_frontier", "E11 ClusterSim speedup", _extract_wallclock_frontier),
+)
+
+
+def _load(path: Path) -> dict:
+    with path.open() as fh:
+        return json.load(fh)
+
+
+def _load_baseline(stem: str) -> dict:
+    return _load(BASELINES / f"{stem}.json")["metrics"]
+
+
+def update_baselines(keep_min: bool) -> int:
+    BASELINES.mkdir(parents=True, exist_ok=True)
+    for stem, desc, extractor in TRACKED:
+        src = ARTIFACTS / f"{stem}.json"
+        if not src.exists():
+            print(f"missing {src}; run the benchmark first", file=sys.stderr)
+            return 1
+        metrics = extractor(_load(src))
+        dst = BASELINES / f"{stem}.json"
+        merged = keep_min and dst.exists()
+        if merged:
+            old = _load_baseline(stem)
+            for key in metrics:
+                if key in old:
+                    metrics[key] = min(metrics[key], old[key])
+        payload = {"benchmark": stem, "description": desc, "metrics": metrics}
+        dst.write_text(json.dumps(payload, indent=1) + "\n")
+        print(f"{'min-merged' if merged else 'pinned'} {dst}")
+    return 0
+
+
+def _check_one(stem: str, desc: str, extractor, tolerance: float) -> list:
+    current_path = ARTIFACTS / f"{stem}.json"
+    baseline_path = BASELINES / f"{stem}.json"
+    if not current_path.exists():
+        return [f"{stem}: no current artifact at {current_path}"]
+    if not baseline_path.exists():
+        return [f"{stem}: no baseline at {baseline_path} (pin with --update)"]
+    current = extractor(_load(current_path))
+    baseline = _load_baseline(stem)
+    failures = []
+    print(f"{stem} ({desc}):")
+    for metric, base in sorted(baseline.items()):
+        now = current.get(metric)
+        if now is None:
+            failures.append(f"{stem}: {metric} missing from current artifact")
+            continue
+        floor = base * (1.0 - tolerance)
+        gated = base >= GATE_MIN_BASELINE
+        if not gated:
+            status = "info (not gated)"
+        elif now >= floor:
+            status = "ok"
+        else:
+            status = "REGRESSION"
+        line = f"  {metric:<24} baseline={base:8.2f}x  current={now:8.2f}x"
+        print(line + f"  floor={floor:8.2f}x  {status}")
+        if gated and now < floor:
+            detail = f"regressed to {now:.2f}x (baseline {base:.2f}x)"
+            failures.append(f"{stem}: {metric} {detail}")
+    return failures
+
+
+def check(tolerance: float) -> int:
+    failures = []
+    for stem, desc, extractor in TRACKED:
+        failures += _check_one(stem, desc, extractor, tolerance)
+    if failures:
+        print("\nTHROUGHPUT REGRESSIONS:", file=sys.stderr)
+        for failure in failures:
+            print(f"  {failure}", file=sys.stderr)
+        return 1
+    print(f"\nall tracked speedups within {tolerance:.0%} of baseline")
+    return 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    help_tol = "allowed fractional slowdown vs baseline (default 0.25)"
+    parser.add_argument("--tolerance", type=float, default=0.25, help=help_tol)
+    help_update = "pin the current artifacts' tracked metrics as baselines"
+    parser.add_argument("--update", action="store_true", help=help_update)
+    help_min = "with --update: keep the smaller of (baseline, current)"
+    parser.add_argument("--keep-min", action="store_true", help=help_min)
+    args = parser.parse_args(argv)
+    if args.update:
+        return update_baselines(args.keep_min)
+    return check(args.tolerance)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

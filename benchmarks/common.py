@@ -6,7 +6,7 @@ import dataclasses
 import json
 import time
 from pathlib import Path
-from typing import Any, Dict, Iterable, List, Sequence
+from typing import Any, Dict, List, Sequence
 
 ART = Path("artifacts/bench")
 
@@ -82,3 +82,21 @@ class Timer:
 
     def __exit__(self, *a):
         self.s = time.perf_counter() - self.t0
+
+
+def best_of(fn, reps: int = 5):
+    """(best seconds over `reps`, warmup result) after one warmup call.
+
+    The shared timing helper for the gated benchmarks: millisecond-scale
+    paths need reps to escape allocator/scheduler noise; seconds-scale
+    deterministic paths should pass reps=1 (warmup + one timed run).
+    The warmup's return value is kept so callers never re-execute a
+    slow path just to read its output.
+    """
+    out = fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out

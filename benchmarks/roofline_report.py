@@ -27,7 +27,7 @@ from pathlib import Path
 
 from repro.configs import get_config
 from repro.launch import roofline as RL
-from repro.models import SHAPES, build_model
+from repro.models import SHAPES
 
 DRYRUN = Path("artifacts/dryrun")
 CHIPS = 256  # single-pod mesh (16 x 16)
@@ -51,8 +51,6 @@ def attention_correction(cfg, cell) -> tuple[float, float]:
     if n_attn == 0:
         return 0.0, 0.0
     B, S = cell.global_batch, cell.seq_len
-    if cfg.family == "encdec":
-        S_dec = max(S // 8, 16)
     H, Kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
     pairs = S * (S + 1) / 2 if not cfg.local_window else \
         min(S * cfg.local_window, S * (S + 1) / 2)
@@ -85,7 +83,6 @@ def cell_roofline(arch: str, shape: str, opt: bool = False) -> dict | None:
     if opt:
         from repro.launch import perf as PERF
         cfg = PERF.optimize(cfg)
-    model = build_model(cfg)
     cell = SHAPES[shape]
     v1, v2 = rec["variants"][0], rec["variants"][1]
     L1, L2, Lf = v1["n_layers"], v2["n_layers"], cfg.n_layers

@@ -20,7 +20,6 @@ each module prints PASS/MISMATCH against the paper's claims.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

@@ -15,7 +15,6 @@ from .common import save_csv, save_json
 
 
 def run(trials: int = 2000, seed: int = 0):
-    rng = np.random.default_rng(seed)
     rows = []
     checks = {}
 

@@ -9,12 +9,16 @@ Two parts:
      decode, contributing a (wall-clock, decode-error) point.  The
      Pareto front of those points IS the runtime-vs-accuracy frontier.
 
-  2. Throughput gate — at n = 256, S = 1000 steps, the ClusterSim path
+  2. Throughput gate — at n = 256, S = 2000 steps, the ClusterSim path
      (policy over the whole trace + ONE batched decode) must beat the
      per-step decode loop (slice + scalar decode every step, the
      pre-ClusterSim dataflow) by >= 10x.
 
-  3. Device validation — frontier corner cells re-run through
+  3. Clustered-straggler trace — the block-correlated slow-episode
+     regime (sim.traces 'clustered'), aligned with the SBM code's
+     worker clusters, swept over every registry scheme.
+
+  4. Device validation — frontier corner cells re-run through
      ClusterSim.run_distributed(): the same masks decoded by the REAL
      shard_map coded all-reduce (DESIGN.md §9) with basis task
      gradients, whose on-device errors must match the analytic ones.
@@ -27,16 +31,20 @@ Artifacts: artifacts/bench/wallclock_frontier.{json,csv}.
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
-from repro.core import codes, decoding
+from repro.core import decoding, registry
 from repro.sim import (ClusterSim, make_policy, make_trace, pareto_front,
                        sweep_frontier)
-from .common import ascii_curves, save_csv, save_json
+from .common import ascii_curves, best_of, save_csv, save_json
 
-SCHEMES = ("frc", "bgc", "rbgc")
+# the frontier sweep covers the paper trio plus the follow-up families
+# (SBM clustered codes, Glasgow-Wootters regular/expander codes) — every
+# name resolves through the registry, which also supplies the decoder
+# compatibilities per scheme
+SCHEMES = ("frc", "bgc", "rbgc", "sbm", "expander")
+NEW_FAMILIES = ("sbm", "expander")
 POLICY_GRID = ("sync", "deadline", "backup", "adaptive")
 
 
@@ -57,7 +65,9 @@ def _per_step_loop(code, trace, policy):
 
 
 def run(n: int = 64, steps: int = 400, s: int = 8, seed: int = 0,
-        gate_n: int = 256, gate_steps: int = 1000):
+        gate_n: int = 256, gate_steps: int = 2000):
+    for scheme in SCHEMES:          # fail fast on unregistered schemes
+        registry.get(scheme)
     trace = make_trace("pareto", steps=steps, n=n, deadline=1.5,
                        tail_scale=0.4, seed=seed)
 
@@ -84,19 +94,24 @@ def run(n: int = 64, steps: int = 400, s: int = 8, seed: int = 0,
     # ---- 2. throughput gate: batched ClusterSim vs per-step loop ----
     gate_trace = make_trace("pareto", steps=gate_steps, n=gate_n,
                             deadline=1.5, tail_scale=0.4, seed=seed)
-    gcode = codes.make_code("bgc", k=gate_n, n=gate_n, s=12,
-                            rng=np.random.default_rng(seed))
+    gcode = registry.make("bgc", k=gate_n, n=gate_n, s=12, seed=seed)
     policy = make_policy("deadline")
     sim = ClusterSim(gcode, gate_trace, policy, decoder="onestep", s=12)
 
-    t0 = time.perf_counter()
-    res = sim.run()
-    t_batched = time.perf_counter() - t0
-    batch_calls = sim.engine.batch_calls
+    # the millisecond-scale batched path needs best-of-5 to escape
+    # allocator/scheduler noise; the seconds-scale deterministic loop
+    # gets warmup + one timed run (reps=1).  Warmup results are reused.
+    t_batched, res = best_of(sim.run, reps=5)
+    # the one-decode-per-run invariant, read from a fresh engine (the
+    # timing repeats pollute sim's counter) over a short trace window —
+    # the invariant is S-independent
+    fresh = ClusterSim(gcode, gate_trace.window(0, 50), policy,
+                       decoder="onestep", s=12)
+    fresh.run()
+    batch_calls = fresh.engine.batch_calls
 
-    t0 = time.perf_counter()
-    loop_times, loop_errs = _per_step_loop(gcode, gate_trace, policy)
-    t_loop = time.perf_counter() - t0
+    t_loop, (loop_times, loop_errs) = best_of(
+        lambda: _per_step_loop(gcode, gate_trace, policy), reps=1)
 
     speedup = t_loop / max(t_batched, 1e-12)
     err_dev = float(np.abs(res.errors - loop_errs).max())
@@ -106,9 +121,35 @@ def run(n: int = 64, steps: int = 400, s: int = 8, seed: int = 0,
           f"speedup={speedup:.1f}x  (decode calls: {batch_calls}, "
           f"max err dev {err_dev:.2e})")
 
-    # ---- 3. device validation: run_distributed vs the analytic path ----
-    vcode = codes.make_code("frc", k=n, n=n, s=s,
-                            rng=np.random.default_rng(seed))
+    # ---- 3. clustered-straggler trace: the SBM regime ----
+    # whole worker blocks go slow together, aligned with the SBM code's
+    # clusters (core.codes.block_ids) — the scenario the clustered
+    # family exists for; one-step decode errors per scheme under a
+    # deadline policy
+    ctrace = make_trace("clustered", steps=min(steps, 200), n=n,
+                        blocks=4, p_block=0.25, episode=8, seed=seed)
+    clustered_rows = []
+    # the sbm intra knob is the point of this section: intra-heavy
+    # replication dies with its own block, cross-cluster replication
+    # (low intra) survives whole-block loss
+    cells = [(scheme, {}) for scheme in SCHEMES]
+    cells.append(("sbm_cross", {"intra": 0.1}))
+    for label, params in cells:
+        fam = registry.get(label.split("_")[0])
+        code = fam.make(k=n, n=n, s=s, seed=seed, **params)
+        cres = ClusterSim(code, ctrace, "deadline", decoder="onestep",
+                          s=s).run()
+        clustered_rows.append({"scheme": label, "trace": "clustered",
+                               "policy": "deadline", "decoder": "onestep",
+                               "mean_error": cres.mean_error,
+                               "mean_step_time": cres.mean_step_time})
+    by_label = {r["scheme"]: r["mean_error"] for r in clustered_rows}
+    print("\nclustered-straggler trace (deadline, onestep, err/k): "
+          + "  ".join(f"{r['scheme']}={r['mean_error']:.4f}"
+                      for r in clustered_rows))
+
+    # ---- 4. device validation: run_distributed vs the analytic path ----
+    vcode = registry.make("frc", k=n, n=n, s=s, seed=seed)
     vtrace = trace.window(0, min(steps, 100))
     dist_devs = {}
     for decoder in ("onestep", "optimal"):
@@ -122,10 +163,20 @@ def run(n: int = 64, steps: int = 400, s: int = 8, seed: int = 0,
           + "  ".join(f"{d}: max dev {v:.2e}" for d, v in dist_devs.items()))
 
     n_cells = len({(r["scheme"], r["policy"]) for r in rows})
+    # the new families must reach the frontier with BOTH decoders (the
+    # registry acceptance: no more hardcoded {frc, bgc, cyclic} walls)
+    emitted = {(r["scheme"], r["decoder"]) for r in rows}
+    new_family_cells = all((f, d) in emitted for f in NEW_FAMILIES
+                           for d in ("onestep", "optimal"))
     checks = {
         "grid_ge_3x3": bool(len(set(SCHEMES)) >= 3
                             and len(set(POLICY_GRID)) >= 3
                             and n_cells >= 9),
+        "sbm_expander_on_frontier_grid": bool(new_family_cells),
+        # cross-cluster replication beats intra-heavy replication when
+        # whole blocks fail together (the SBM family's reason to exist)
+        "sbm_cross_cluster_beats_intra_on_clustered_trace": bool(
+            by_label["sbm_cross"] <= by_label["sbm"]),
         "one_batched_decode_per_cell": bool(batch_calls == 1),
         "speedup_ge_10x": bool(speedup >= 10.0),
         "errors_match_loop_1e-9": bool(err_dev <= 1e-9),
@@ -141,6 +192,7 @@ def run(n: int = 64, steps: int = 400, s: int = 8, seed: int = 0,
         "gate": {"n": gate_n, "steps": gate_steps, "loop_s": t_loop,
                  "batched_s": t_batched, "speedup": speedup,
                  "max_err_dev": err_dev},
+        "clustered_trace": clustered_rows,
         "dist_validation": {"n_devices": int(n_dev),
                             "max_dev_by_decoder": dist_devs},
         "checks": checks,
@@ -156,7 +208,7 @@ def main(argv=None) -> int:
     ap.add_argument("--steps", type=int, default=400)
     ap.add_argument("--s", type=int, default=8)
     ap.add_argument("--gate-n", type=int, default=256)
-    ap.add_argument("--gate-steps", type=int, default=1000)
+    ap.add_argument("--gate-steps", type=int, default=2000)
     args = ap.parse_args(argv)
     rep = run(n=args.n, steps=args.steps, s=args.s, gate_n=args.gate_n,
               gate_steps=args.gate_steps)

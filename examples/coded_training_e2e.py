@@ -24,7 +24,6 @@ import shutil
 import tempfile
 import time
 
-import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model

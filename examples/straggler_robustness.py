@@ -30,7 +30,6 @@ def main(argv=None):
     ap.add_argument("--trials", type=int, default=200)
     args = ap.parse_args(argv)
     n, s, delta = args.n, args.s, args.delta
-    rng = np.random.default_rng(0)
 
     scenarios = {
         "iid": dict(name="iid", delta=delta, seed=0),

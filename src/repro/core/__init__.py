@@ -34,4 +34,5 @@ from .decoding import (  # noqa: F401
 )
 from .assignment import CodedAssignment, build_assignment  # noqa: F401
 from .engine import BatchDecode, DecodeEngine  # noqa: F401
-from . import adversary, simulate, theory  # noqa: F401
+from .registry import CodeFamily  # noqa: F401
+from . import adversary, registry, simulate, theory  # noqa: F401

@@ -13,7 +13,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

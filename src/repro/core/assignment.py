@@ -22,7 +22,7 @@ data-parallel all-reduce (DESIGN.md Sec. 2.1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

@@ -28,6 +28,8 @@ __all__ = [
     "bgc",
     "rbgc",
     "sregular",
+    "sbm",
+    "expander",
     "cyclic_repetition",
     "uncoded",
     "make_code",
@@ -44,6 +46,10 @@ class GradientCode:
     G: np.ndarray  # (k, n)
     s: int  # nominal tasks/worker (column sparsity target)
     seed: Optional[int] = None
+    # family construction params beyond (k, n, s) — e.g. sbm's
+    # blocks/intra — as (key, value) pairs so the elastic rebuild
+    # (with_workers) reconstructs the SAME variant, not the defaults
+    params: Tuple[Tuple[str, object], ...] = ()
 
     @property
     def k(self) -> int:
@@ -106,9 +112,14 @@ class GradientCode:
         return cached
 
     def with_workers(self, n: int, rng: np.random.Generator) -> "GradientCode":
-        """Rebuild the same family for a different worker count (elastic)."""
+        """Rebuild the same family for a different worker count (elastic).
+
+        Family params (sbm blocks/intra, ...) carry over so the rebuilt
+        code is the same VARIANT, not the family defaults.
+        """
         fam = self.name.split("(")[0]
-        return make_code(fam, k=n, n=n, s=self.s, rng=rng)
+        return make_code(fam, k=n, n=n, s=self.s, rng=rng,
+                        **dict(self.params))
 
 
 def _check(k: int, n: int, s: int) -> None:
@@ -187,6 +198,88 @@ def sregular(k: int, n: int, s: int, rng: np.random.Generator) -> GradientCode:
     return GradientCode(name="sregular", G=G, s=s)
 
 
+def block_ids(count: int, blocks: int) -> np.ndarray:
+    """[count] int block id per index, contiguous near-equal blocks.
+
+    The one partition rule shared by the SBM code construction and the
+    clustered-straggler trace source, so a clustered trace's failing
+    blocks line up with the code's worker blocks.
+    """
+    blocks = max(1, min(blocks, count))
+    ids = np.empty(count, dtype=np.int64)
+    for b, chunk in enumerate(np.array_split(np.arange(count), blocks)):
+        ids[chunk] = b
+    return ids
+
+
+def sbm(k: int, n: int, s: int, rng: np.random.Generator, *,
+        blocks: int = 4, intra: float = 0.7) -> GradientCode:
+    """Stochastic-block-model code (Charles & Papailiopoulos 2017).
+
+    Tasks and workers are partitioned into `blocks` contiguous clusters
+    and G_ij ~ Bernoulli(p_in) when task i and worker j share a cluster,
+    Bernoulli(p_out) otherwise.  `intra` is the fraction of a worker's
+    expected s tasks drawn from its own cluster; densities are
+    calibrated per worker so E[column degree] == s regardless of ragged
+    block sizes.  blocks=1 (or intra such that p_in == p_out) recovers
+    the BGC; high `intra` concentrates redundancy inside clusters, the
+    regime where clustered (pod-correlated) stragglers separate the
+    families.
+    """
+    _check(k, n, s)
+    if not (0.0 <= intra <= 1.0):
+        raise ValueError(f"intra={intra} must be in [0, 1]")
+    # both sides must share ONE block count or the membership lookup
+    # below misaligns (k < blocks <= n would index past tasks_in)
+    blocks = max(1, min(blocks, k, n))
+    t_id = block_ids(k, blocks)
+    w_id = block_ids(n, blocks)
+    tasks_in = np.bincount(t_id, minlength=blocks).astype(np.float64)
+    k_in = tasks_in[w_id]                           # [n] own-cluster tasks
+    k_out = k - k_in
+    # per-worker expected-degree budgets: intra*s own-cluster, the rest
+    # cross-cluster.  A side that saturates (expected degree would need
+    # p > 1, e.g. small own-cluster at high intra) SPILLS its excess to
+    # the other side rather than dropping it, so E[column degree] == s
+    # holds at every ragged block size (s <= k guarantees capacity) and
+    # the paper's rho = k/(r s) calibration stays valid.
+    want_in = np.full(n, intra * s)
+    want_out = np.full(n, (1.0 - intra) * s)
+    eff_in = np.minimum(want_in, k_in)
+    eff_out = np.minimum(want_out + (want_in - eff_in), k_out)
+    eff_in = np.minimum(eff_in + (want_out + (want_in - eff_in) - eff_out),
+                        k_in)
+    p_in = np.divide(eff_in, k_in, out=np.zeros(n), where=k_in > 0)
+    p_out = np.divide(eff_out, k_out, out=np.zeros(n), where=k_out > 0)
+    same = t_id[:, None] == w_id[None, :]           # [k, n]
+    P = np.where(same, p_in[None, :], p_out[None, :])
+    G = (rng.random((k, n)) < P).astype(np.float64)
+    return GradientCode(name="sbm", G=G, s=s,
+                        params=(("blocks", blocks), ("intra", intra)))
+
+
+def expander(k: int, n: int, s: int, rng: np.random.Generator) -> GradientCode:
+    """Regular random bipartite code (Glasgow & Wootters 2021).
+
+    Every worker computes exactly s tasks and every task is replicated
+    ⌊ns/k⌋ or ⌈ns/k⌉ times — the (s, ns/k)-biregular support whose
+    least-squares decoding beats one-step decoding at the same
+    replication.  Sampled by degree-balanced random selection: each
+    column picks the s least-replicated tasks with random tie-breaking,
+    which keeps both sides regular at every ragged (k, n, s) and is a
+    random near-regular bipartite graph (an expander w.h.p., like the
+    configuration model).
+    """
+    _check(k, n, s)
+    G = np.zeros((k, n), dtype=np.float64)
+    row_deg = np.zeros(k, dtype=np.float64)
+    for j in rng.permutation(n):
+        pick = np.argsort(row_deg + rng.random(k), kind="stable")[:s]
+        G[pick, j] = 1.0
+        row_deg[pick] += 1.0
+    return GradientCode(name="expander", G=G, s=s)
+
+
 def cyclic_repetition(k: int, n: int, s: int, rng: Optional[np.random.Generator] = None) -> GradientCode:
     """Cyclic support code: worker j computes tasks {j, j+1, ..., j+s-1} mod k.
 
@@ -211,11 +304,17 @@ def uncoded(k: int, n: Optional[int] = None, s: int = 1,
     return GradientCode(name="uncoded", G=np.eye(k, dtype=np.float64), s=1)
 
 
+# Raw constructor table, kept for direct access; the declarative layer
+# (decoder compatibilities, param grids, adversary profiles, validation)
+# lives in core.registry, which is the factory every scheme-switch in
+# the repo resolves through.
 CODE_REGISTRY: Dict[str, Callable[..., GradientCode]] = {
     "frc": frc,
     "bgc": bgc,
     "rbgc": rbgc,
     "sregular": sregular,
+    "sbm": sbm,
+    "expander": expander,
     "cyclic": cyclic_repetition,
     "uncoded": uncoded,
 }
@@ -228,13 +327,17 @@ def make_code(
     s: int,
     rng: Optional[np.random.Generator] = None,
     seed: Optional[int] = None,
+    **params,
 ) -> GradientCode:
-    """Factory used by configs / CLI: make_code('bgc', k=128, n=128, s=5)."""
-    if name not in CODE_REGISTRY:
-        raise KeyError(f"unknown code {name!r}; have {sorted(CODE_REGISTRY)}")
-    if rng is None:
-        rng = np.random.default_rng(0 if seed is None else seed)
-    return CODE_REGISTRY[name](k, n, s, rng=rng)
+    """Factory used by configs / CLI: make_code('bgc', k=128, n=128, s=5).
+
+    Delegates to core.registry (the authoritative scheme table) so
+    unknown names raise the registry's actionable error and family
+    extras (e.g. sbm's blocks/intra) pass through.
+    """
+    from . import registry  # deferred: registry imports this module
+
+    return registry.make(name, k=k, n=n, s=s, rng=rng, seed=seed, **params)
 
 
 def spectral_gap(code: GradientCode) -> float:

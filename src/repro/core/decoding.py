@@ -37,6 +37,8 @@ __all__ = [
     "err_batch",
     "onestep_weights_batch",
     "optimal_weights_batch",
+    "normal_eq_weights_batch",
+    "solve_masked_gram",
     "algorithmic_weights_batch",
     "algorithmic_error_curve_batch",
     "spectral_norm_sq_batch",
@@ -262,27 +264,80 @@ def optimal_weights_batch(G: np.ndarray, masks: np.ndarray,
 
     ridge == 0 takes the min-norm LS solution via batched pinv of the
     column-masked G (zeroed columns contribute zero weights, matching
-    the per-mask submatrix lstsq).  ridge > 0 solves the masked normal
-    equations (m G^T G m + ridge I) w = m G^T 1, whose off-support rows
-    reduce to ridge * w_j = 0.  Work is chunked over B to bound memory.
+    the per-mask submatrix lstsq).  ridge > 0 goes through the masked
+    normal equations (normal_eq_weights_batch), whose off-support rows
+    reduce to w_j = 0.  Work is chunked over B to bound memory.
     """
     G = _as2d(G)
     k, n = G.shape
     masks = _as_masks(masks, n)
+    if ridge > 0.0:
+        return normal_eq_weights_batch(G, masks, ridge=ridge)
     B = masks.shape[0]
     ones = np.ones(k)
     W = np.zeros((B, n))
     for sl in _batch_chunks(B, k, n):
         m = masks[sl].astype(np.float64)
         A = G[None, :, :] * m[:, None, :]                    # [b, k, n]
-        if ridge > 0.0:
-            AtA = np.einsum("bki,bkj->bij", A, A)
-            AtA[:, np.arange(n), np.arange(n)] += ridge
-            rhs = A.transpose(0, 2, 1) @ ones
-            W[sl] = np.linalg.solve(AtA, rhs[..., None])[..., 0] \
-                * m  # exact zeros at stragglers
-        else:
-            W[sl] = (np.linalg.pinv(A) @ ones) * m
+        W[sl] = (np.linalg.pinv(A) @ ones) * m
+    return W
+
+
+def solve_masked_gram(masked_gram: np.ndarray, masks: np.ndarray,
+                      rhs0: np.ndarray, ridge: float) -> np.ndarray:
+    """Solve the [B] regularized normal-equation systems and return
+    weights [B, n].
+
+    ``masked_gram[b] = diag(m_b) G^T G diag(m_b)`` (the Gram ensemble —
+    from numpy or the Pallas batched Gram kernel), ``rhs0 = G^T 1``.
+    Straggler rows are all-zero in the masked Gram; the unit added to
+    their diagonal pins x_j = 0, and ``ridge`` stabilizes the on-support
+    block (rank-deficient supports — duplicated FRC/SBM columns — tend
+    to the min-norm solution as ridge -> 0).
+    """
+    masks = np.asarray(masks, dtype=bool)
+    B, n = masks.shape
+    M = np.array(masked_gram, dtype=np.float64)   # copy: diagonal is edited
+    idx = np.arange(n)
+    M[:, idx, idx] += np.where(masks, ridge, 1.0)
+    rhs = masks * rhs0[None, :]
+    x = np.linalg.solve(M, rhs[..., None])[..., 0]
+    return x * masks
+
+
+def normal_eq_weights_batch(G: np.ndarray, masks: np.ndarray,
+                            ridge: float = 1e-8,
+                            gram: Optional[np.ndarray] = None,
+                            rhs0: Optional[np.ndarray] = None) -> np.ndarray:
+    """Batched least-squares weights via the masked-Gram identity.
+
+    Since A_b = G diag(m_b), the per-mask Gram matrix is
+    ``A_b^T A_b = diag(m_b) (G^T G) diag(m_b)`` — the FULL Gram G^T G
+    masked on rows and columns.  So G^T G is formed once (O(k n^2)) and
+    each mask costs an O(n^2) masking plus one LAPACK batched solve,
+    never a per-mask pinv/SVD: the decoder path that makes batched
+    optimal decoding of [B, n] ensembles (sbm / expander frontiers)
+    cheap.  Returns [B, n]; exact zeros at stragglers.
+
+    Long-lived callers (DecodeEngine) pass their cached ``gram`` /
+    ``rhs0`` so repeated decodes skip even the one-time contraction.
+    """
+    G = _as2d(G)
+    k, n = G.shape
+    masks = _as_masks(masks, n)
+    if ridge <= 0.0:
+        raise ValueError("normal_eq_weights_batch needs ridge > 0; use "
+                         "optimal_weights_batch for the exact min-norm path")
+    B = masks.shape[0]
+    if gram is None:
+        gram = G.T @ G                                       # [n, n] once
+    if rhs0 is None:
+        rhs0 = G.sum(axis=0)                                 # G^T 1_k
+    W = np.zeros((B, n))
+    for sl in _batch_chunks(B, n, n):
+        m = masks[sl].astype(np.float64)
+        Mg = gram[None, :, :] * m[:, :, None] * m[:, None, :]
+        W[sl] = solve_masked_gram(Mg, masks[sl], rhs0, ridge)
     return W
 
 

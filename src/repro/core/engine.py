@@ -10,7 +10,12 @@ Python loop over trials:
   * ``decode_batch(masks)`` -> ``[B, n]`` weights + ``[B]`` errors for
     the one-step (Algorithm 1), ridge/optimal (Algorithm 2) and
     algorithmic (Lemma 12) decoders, plus the ignore-stragglers
-    baseline.
+    baseline.  The optimal decoder has two strategies
+    (``optimal_impl``): exact batched pinv, and the masked-Gram normal
+    equations — ``A_b^T A_b = diag(m_b) (G^T G) diag(m_b)``, so the
+    Gram forms once per code and each mask costs O(n^2) + a batched
+    LAPACK solve, the fast path for the sbm/expander least-squares
+    frontiers.
   * backends: ``numpy`` (BLAS batched, float64 — the CPU master path),
     ``xla`` / ``pallas`` / ``pallas_interpret`` (the batched-grid Pallas
     kernels in kernels.batched_decode; fp32).  The Pallas one-step path
@@ -30,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 
@@ -67,17 +72,27 @@ class DecodeEngine:
     def __init__(self, code: GradientCode, *, backend: str = "numpy",
                  rho: Optional[float] = None, s: Optional[int] = None,
                  ridge: float = 0.0, iters: int = 8, sparse: str = "auto",
-                 cache_size: int = 512):
+                 optimal_impl: str = "auto", cache_size: int = 512):
         if backend not in _BACKENDS:
             raise ValueError(f"backend {backend!r} not in {_BACKENDS}")
         if sparse not in ("auto", "always", "never"):
             raise ValueError(f"sparse {sparse!r}")
+        if optimal_impl not in ("auto", "pinv", "gram"):
+            raise ValueError(f"optimal_impl {optimal_impl!r} not in "
+                             f"('auto', 'pinv', 'gram')")
         self.code = code
         self.backend = backend
         self.rho = rho                  # None -> per-mask k/(r s)
         self.ridge = ridge
         self.iters = iters
         self.sparse = sparse
+        # least-squares strategy: 'pinv' = exact min-norm batched pinv
+        # (matches decoding.optimal_weights to solver rounding); 'gram' =
+        # masked-Gram normal equations (one O(k n^2) Gram, O(n^2)/mask —
+        # the fast path for large ensembles, ridge-regularized); 'auto' =
+        # pinv on the numpy backend with ridge == 0, gram otherwise
+        self.optimal_impl = optimal_impl
+        self._gram = None               # lazy G^T G / G^T 1 for 'gram'
         # s in rho = k/(r s): the caller's nominal tasks/worker when
         # given (the paper's calibration — simulate passes it), else
         # inferred from G's density exactly like decoding.onestep_weights
@@ -174,13 +189,52 @@ class DecodeEngine:
         return np.asarray(V, dtype=np.float64)
 
     def _optimal_batch(self, masks: np.ndarray) -> BatchDecode:
-        # least-squares has no Pallas path; every backend lands on the
-        # batched numpy solver (the paper's point: optimal decode IS the
-        # expensive baseline)
         G = self.code.G
-        W = decoding.optimal_weights_batch(G, masks, ridge=self.ridge)
+        mode = self.optimal_impl
+        if mode == "auto":
+            mode = "pinv" if (self.backend == "numpy" and self.ridge == 0.0) \
+                else "gram"
+        if mode == "pinv":
+            # exact min-norm batched pinv (the scalar-oracle-equivalent
+            # reference path; numpy only)
+            W = decoding.optimal_weights_batch(G, masks, ridge=self.ridge)
+        else:
+            W = self._gram_weights(masks)
         errs = decoding.err_batch(G, W)
         return BatchDecode(weights=W, errors=errs)
+
+    def _gram_weights(self, masks: np.ndarray) -> np.ndarray:
+        """Masked-Gram normal-equations least squares (DESIGN.md §10).
+
+        The [B, n, n] Gram ensemble comes from the batched Pallas kernel
+        on kernel backends and from numpy on the numpy backend; for 0/1
+        support matrices the Gram entries are small integers, so the
+        kernel's fp32 ensemble is EXACT and the backends agree.  The
+        batched LAPACK solve always runs in fp64 with a shared ridge
+        floor (normal equations square the condition number; on
+        rank-deficient supports the weights approach the min-norm
+        solution as ridge -> 0 while the decode *errors* match the pinv
+        path far tighter than the weights do).
+        """
+        ridge = max(self.ridge, 1e-6)
+        if self._gram is None:
+            G = self.code.G
+            self._gram = (G.T @ G, G.sum(axis=0))
+        gram, rhs0 = self._gram
+        if self.backend == "numpy":
+            return decoding.normal_eq_weights_batch(self.code.G, masks,
+                                                    ridge=ridge,
+                                                    gram=gram, rhs0=rhs0)
+        import jax.numpy as jnp
+
+        from ..kernels import ops
+        gram_dev = jnp.asarray(gram.astype(np.float32))   # once per call
+        W = np.zeros(masks.shape)
+        for sl in decoding._batch_chunks(masks.shape[0], self.n, self.n):
+            Mg = np.asarray(ops.batched_masked_gram(
+                gram_dev, jnp.asarray(masks[sl]), impl=self.backend))
+            W[sl] = decoding.solve_masked_gram(Mg, masks[sl], rhs0, ridge)
+        return W
 
     def _algorithmic_batch(self, masks: np.ndarray,
                            iters: int) -> BatchDecode:

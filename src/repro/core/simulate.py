@@ -6,21 +6,22 @@ over random straggler draws, and the algorithmic-decoder curve ||u_t||^2/k.
 Batched architecture: each (scheme, delta, decoder) cell samples ALL of
 its trial masks up front (`sample_straggler_masks`) and hands them to a
 DecodeEngine as one [trials, n] ensemble — one batched decode per cell
-instead of a Python loop over trials.  Schemes with code randomness
-(bgc / rbgc / sregular) additionally average over `code_draws`
-independent code draws, splitting the trials across them (one batched
-decode per draw); deterministic schemes use a single draw.
+instead of a Python loop over trials.  Schemes the registry declares
+randomized (bgc / rbgc / sregular / sbm / expander) additionally average
+over `code_draws` independent code draws, splitting the trials across
+them (one batched decode per draw); deterministic schemes use a single
+draw.  Scheme names resolve through core.registry.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Iterable, List, Optional, Sequence
+from typing import List, Sequence
 
 import numpy as np
 
-from . import codes as codes_lib
 from . import decoding
+from . import registry
 from .engine import DecodeEngine
 
 __all__ = [
@@ -33,9 +34,16 @@ __all__ = [
     "RESAMPLED_SCHEMES",
 ]
 
-# schemes whose construction is random: the paper averages over code AND
-# straggler randomness for these
-RESAMPLED_SCHEMES = ("bgc", "rbgc", "sregular")
+
+def _resampled() -> tuple:
+    """Schemes whose construction is random: the paper averages over
+    code AND straggler randomness for these.  Declared per-family in
+    the registry (CodeFamily.randomized), not hardcoded here."""
+    return registry.randomized_schemes()
+
+
+# legacy alias (module-load snapshot); prefer registry.randomized_schemes()
+RESAMPLED_SCHEMES = _resampled()
 
 
 def sample_straggler_mask(n: int, num_stragglers: int, rng: np.random.Generator
@@ -108,14 +116,15 @@ def monte_carlo_error(
     the trials are split across them, so the decode stays batched.
     FRC/cyclic/uncoded are deterministic and always use a single code.
     """
+    fam = registry.get(scheme)
+    fam.require_decoder(decoder)
     rng = np.random.default_rng(seed)
     num_straggle = int(round(delta * n))
-    draws = code_draws if (resample_code and scheme in RESAMPLED_SCHEMES) \
-        else 1
+    draws = code_draws if (resample_code and fam.randomized) else 1
     errs = np.empty(trials)
     lo = 0
     for chunk in _trial_groups(trials, draws):
-        code = codes_lib.make_code(scheme, k=k, n=n, s=s, rng=rng)
+        code = fam.make(k=k, n=n, s=s, rng=rng)
         masks = sample_straggler_masks(n, num_straggle, chunk, rng)
         # nominal s, NOT inferred from G's density: the paper's
         # rho = k/(r s) calibration uses the construction parameter
@@ -161,12 +170,13 @@ def algorithmic_curve_mc(
     code_draws: int = 16,
 ) -> np.ndarray:
     """Mean ||u_t||^2/k curve, t = 0..iters (Fig. 5), batched per draw."""
+    fam = registry.get(scheme)
     rng = np.random.default_rng(seed)
     num_straggle = int(round(delta * k))
-    draws = code_draws if scheme in RESAMPLED_SCHEMES else 1
+    draws = code_draws if fam.randomized else 1
     acc = np.zeros(iters + 1)
     for chunk in _trial_groups(trials, draws):
-        code = codes_lib.make_code(scheme, k=k, n=k, s=s, rng=rng)
+        code = fam.make(k=k, n=k, s=s, rng=rng)
         masks = sample_straggler_masks(k, num_straggle, chunk, rng)
         curves = decoding.algorithmic_error_curve_batch(code.G, masks, iters)
         acc += curves.sum(axis=0)

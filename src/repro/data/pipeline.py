@@ -15,7 +15,7 @@ convergence tests are meaningful, not pure noise.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

@@ -40,8 +40,7 @@ Two aggregation surfaces:
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -172,6 +171,20 @@ class CodedAllReduce:
                              f"axes {self.mesh.axis_names}")
         self.axis_name = self.mesh.axis_names[0]
         self.partition = partition_workers(code.n, self.mesh.devices.size)
+
+    @classmethod
+    def for_scheme(cls, scheme: str, n: int, *, s: int,
+                   seed: int = 0, **kw) -> "CodedAllReduce":
+        """Build the all-reduce for a registry scheme name at k = n.
+
+        The registry-driven entry point the parametrized differential
+        tests use: any family registered in core.registry (including
+        sbm / expander) runs on the device mesh without this module
+        knowing its name.
+        """
+        from ..core import registry
+
+        return cls(registry.make(scheme, k=n, n=n, s=s, seed=seed), **kw)
 
     @property
     def n_devices(self) -> int:

@@ -12,6 +12,9 @@ decoded in one launch:
                                 (reads B*k*rmax mask entries instead of
                                 streaming B*k*n dense zeros)
     batched_algorithmic_decode  U_t per mask, Lemma-12 iterates [B, k]
+    batched_masked_gram         diag(m_b) Gram diag(m_b)       [B, n, n]
+                                (the normal-equations ensemble feeding
+                                the batched least-squares decoder)
 
 All kernels tile (batch, k) in parallel and reduce sequentially over
 the contracted dimension in an fp32 VMEM accumulator; G is never
@@ -37,6 +40,7 @@ __all__ = [
     "batched_onestep_decode_ell",
     "batched_algorithmic_decode",
     "batched_algorithmic_iterate",
+    "batched_masked_gram",
 ]
 
 
@@ -165,6 +169,60 @@ def batched_onestep_decode_ell(
         interpret=interpret,
     )(m, idx, val, r)
     return out[:B, :k]
+
+
+# --------------------------------------------------------------------------
+# batched masked Gram: Mg[b] = diag(m_b) Gram diag(m_b), the per-mask
+# normal-equation matrices of the least-squares decoder.  Pure VPU
+# (elementwise outer masking) — the O(k n^2) Gram contraction happens
+# ONCE outside the kernel, so the ensemble costs O(B n^2) reads/writes.
+# --------------------------------------------------------------------------
+
+def _masked_gram_kernel(mi_ref, mj_ref, g_ref, o_ref):
+    mi = mi_ref[...]                             # [bb, bi]
+    mj = mj_ref[...]                             # [bb, bj]
+    g = g_ref[...].astype(jnp.float32)           # [bi, bj]
+    o_ref[...] = mi[:, :, None] * mj[:, None, :] * g[None, :, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bi", "bj", "interpret"))
+def batched_masked_gram(
+    gram: jax.Array,       # [n, n] = G^T G (precomputed once per code)
+    masks: jax.Array,      # [B, n] bool/0-1
+    *,
+    bb: int = 8,
+    bi: int = 128,
+    bj: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Mg[b] = m_b m_b^T ⊙ Gram for every mask in the batch.  [B, n, n]
+    fp32.  Straggler rows/columns come out exactly zero; the solver adds
+    the ridge/unit diagonal on the host (core.decoding.solve_masked_gram).
+    """
+    n = gram.shape[0]
+    B = masks.shape[0]
+    bb, bi, bj = min(bb, B), min(bi, n), min(bj, n)
+    nb, ni, nj = map(math.ceil, (B / bb, n / bi, n / bj))
+    pad_m = max(ni * bi, nj * bj)
+    g = _pad2(gram.astype(jnp.float32), ni * bi, nj * bj)
+    m = _pad2(masks.astype(jnp.float32), nb * bb, pad_m)
+
+    out = pl.pallas_call(
+        _masked_gram_kernel,
+        grid=(nb, ni, nj),
+        in_specs=[
+            pl.BlockSpec((bb, bi), lambda b, i, j: (b, i)),
+            pl.BlockSpec((bb, bj), lambda b, i, j: (b, j)),
+            pl.BlockSpec((bi, bj), lambda b, i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bi, bj), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb * bb, ni * bi, nj * bj),
+                                       jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(m, m, g)
+    return out[:B, :n, :n]
 
 
 # --------------------------------------------------------------------------

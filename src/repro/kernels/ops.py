@@ -11,15 +11,13 @@ against repro.kernels.ref in tests/test_kernels_pallas.py.
 
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
 from .algorithmic_decode import algorithmic_decode as _algorithmic_pallas
 from .batched_decode import (
     batched_algorithmic_decode as _batched_algorithmic_pallas,
+    batched_masked_gram as _batched_masked_gram_pallas,
     batched_onestep_decode as _batched_onestep_pallas,
     batched_onestep_decode_ell as _batched_onestep_ell_pallas,
 )
@@ -37,7 +35,7 @@ __all__ = [
     "coded_accumulate", "coded_accumulate_batched",
     "onestep_decode", "algorithmic_decode",
     "batched_onestep_decode", "batched_onestep_decode_ell",
-    "batched_algorithmic_decode",
+    "batched_algorithmic_decode", "batched_masked_gram",
 ]
 
 
@@ -120,6 +118,17 @@ def batched_onestep_decode_ell(ell_idx, ell_val, masks, rhos, *,
         return rhos.astype(jnp.float32)[:, None] * v
     return _batched_onestep_ell_pallas(ell_idx, ell_val, masks, rhos,
                                        bb=bb, bk=bk, interpret=_interp(impl))
+
+
+def batched_masked_gram(gram, masks, *, impl="pallas", bb=8, bi=128, bj=128):
+    """Mg [B, n, n] = diag(m_b) Gram diag(m_b) — the normal-equations
+    ensemble of the batched least-squares decoder (DecodeEngine optimal
+    path on kernel backends)."""
+    if impl == "xla":
+        m = masks.astype(jnp.float32)
+        return m[:, :, None] * m[:, None, :] * gram.astype(jnp.float32)[None]
+    return _batched_masked_gram_pallas(gram, masks, bb=bb, bi=bi, bj=bj,
+                                       interpret=_interp(impl))
 
 
 def batched_algorithmic_decode(G, masks, nus, iters, *, impl="pallas",

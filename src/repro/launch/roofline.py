@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 # TPU v5e
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip

@@ -15,9 +15,8 @@ from __future__ import annotations
 import argparse
 import json
 
-import numpy as np
-
 from repro.configs import get_config, list_archs
+from repro.core import registry
 from repro.models import build_model
 from repro.optim import OptConfig
 from repro.runtime import FaultInjector, make_straggler_model
@@ -30,6 +29,7 @@ STRAGGLER_PRESETS = {
     "fixed": {"delta": 0.25},
     "deadline": {"deadline": 1.5, "tail_scale": 0.3},
     "correlated": {"pod_size": 4, "p_pod": 0.1},
+    "clustered": {"blocks": 4, "p_block": 0.15},
 }
 
 
@@ -38,11 +38,11 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", required=True, choices=list_archs())
     ap.add_argument("--smoke", action="store_true",
                     help="reduced same-family config (CPU-runnable)")
-    ap.add_argument("--code", default="bgc",
-                    choices=["frc", "bgc", "rbgc", "sregular", "cyclic",
-                             "uncoded"])
+    # scheme choices come from the registry: registering a family in
+    # core/registry.py is all it takes to reach this CLI
+    ap.add_argument("--code", default="bgc", choices=list(registry.names()))
     ap.add_argument("--decoder", default="onestep",
-                    choices=["onestep", "optimal", "algorithmic", "ignore"])
+                    choices=list(registry.DECODERS))
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--s", type=int, default=3)
     ap.add_argument("--steps", type=int, default=50)
@@ -61,7 +61,7 @@ def main(argv=None) -> int:
                          "aggregation over a 1-D worker mesh spanning all "
                          "local devices (DESIGN.md §9)")
     ap.add_argument("--trace", default="none",
-                    choices=["none", "pareto", "bimodal"],
+                    choices=["none", "pareto", "bimodal", "clustered"],
                     help="drive straggler masks from a latency trace "
                          "through --sync-policy instead of --straggler")
     ap.add_argument("--sync-policy", default="deadline",

@@ -9,14 +9,14 @@ absolute positions (whisper uses no RoPE).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..dist import constrain
 from .config import ArchConfig
-from .layers import attention, cross_entropy, mlp, norm
+from .layers import cross_entropy, norm
 from .spec import ParamSpec
 from . import blocks as B
 

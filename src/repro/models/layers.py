@@ -6,7 +6,6 @@ GSPMD can partition them; no framework dependency.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -10,7 +10,7 @@ Models build a nested dict of `ParamSpec`s; from it we derive
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ first replicated dimension over 'data' (ZeRO-1) when divisible.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

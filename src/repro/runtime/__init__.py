@@ -5,6 +5,7 @@ from .latency import StepTimeModel, simulate_wallclock  # noqa: F401
 from .straggler import (  # noqa: F401
     AdversarialStragglers,
     BimodalStragglers,
+    ClusteredStragglers,
     CorrelatedStragglers,
     DeadlineStragglers,
     FixedFractionStragglers,

@@ -15,7 +15,6 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
-import numpy as np
 
 __all__ = ["FaultPlan", "FaultInjector"]
 

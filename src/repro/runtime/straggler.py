@@ -8,8 +8,6 @@ replacement for the paper's master observing arrivals.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 import numpy as np
 
 from ..core import adversary as ADV
@@ -17,7 +15,8 @@ from ..core import adversary as ADV
 __all__ = ["StragglerModel", "NoStragglers", "IIDStragglers",
            "FixedFractionStragglers", "DeadlineStragglers",
            "CorrelatedStragglers", "AdversarialStragglers",
-           "BimodalStragglers", "make_straggler_model"]
+           "BimodalStragglers", "ClusteredStragglers",
+           "make_straggler_model"]
 
 
 class StragglerModel:
@@ -149,6 +148,49 @@ class BimodalStragglers(StragglerModel):
 
 
 @dataclasses.dataclass
+class ClusteredStragglers(StragglerModel):
+    """Cluster-correlated slow episodes: whole blocks of workers go slow
+    together and STAY slow for `episode` consecutive steps.
+
+    Workers are partitioned into `blocks` contiguous clusters by the
+    same rule as the SBM code construction (core.codes.block_ids), so a
+    clustered trace's failing blocks line up with an SBM code's worker
+    blocks — the regime in which clustered codes and iid-style codes
+    separate (Charles & Papailiopoulos).  Each block independently
+    enters a slow episode with probability `p_block` per epoch (epoch =
+    `episode` steps), which keeps the draw a pure function of
+    (seed, step) — every SPMD host derives the same latencies with no
+    communication and no Markov state to thread.
+    """
+
+    blocks: int = 4
+    p_block: float = 0.15
+    episode: int = 8          # steps a slow episode lasts
+    fast: float = 1.0
+    slow: float = 3.0
+    jitter: float = 0.05      # sigma of multiplicative log-normal noise
+    deadline: float = 1.5
+    seed: int = 0
+
+    def slow_blocks(self, step: int) -> np.ndarray:
+        """[blocks] bool slow indicator for the epoch containing step."""
+        epoch = step // max(self.episode, 1)
+        rng = np.random.default_rng((self.seed, epoch, 0xC1))
+        return rng.random(self.blocks) < self.p_block
+
+    def latencies(self, step: int, n: int) -> np.ndarray:
+        from ..core.codes import block_ids
+
+        member = block_ids(n, self.blocks)
+        base = np.where(self.slow_blocks(step)[member], self.slow, self.fast)
+        rng = np.random.default_rng((self.seed, step))
+        return base * np.exp(self.jitter * rng.standard_normal(n))
+
+    def sample(self, step: int, n: int) -> np.ndarray:
+        return self.latencies(step, n) <= self.deadline
+
+
+@dataclasses.dataclass
 class AdversarialStragglers(StragglerModel):
     """Poly-time adversary (paper Sec. 4): FRC-structural if the code is an
     FRC, else greedy; budget = floor(delta * n) stragglers per step.
@@ -195,6 +237,7 @@ def make_straggler_model(name: str, **kw) -> StragglerModel:
         "correlated": CorrelatedStragglers,
         "adversarial": AdversarialStragglers,
         "bimodal": BimodalStragglers,
+        "clustered": ClusteredStragglers,
     }
     if name not in models:
         raise ValueError(f"unknown straggler model {name!r}")

@@ -10,7 +10,7 @@ per-slot deadlines.  See DESIGN.md Sec. 3.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp

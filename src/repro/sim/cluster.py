@@ -21,6 +21,7 @@ from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
 
+from ..core import registry
 from ..core.codes import GradientCode
 from ..core.engine import DecodeEngine
 from .traces import LatencyTrace
@@ -226,17 +227,37 @@ class ClusterRunResult:
 class ClusterSim:
     """Trace-driven wall-clock × accuracy co-simulation for one code.
 
+    ``code`` may be a GradientCode or a registry scheme name (built at
+    k = n = trace.n with the given ``s``); the requested decoder is
+    validated against the family's declared compatibilities.
+
     The whole run decodes in exactly ONE DecodeEngine.decode_batch call:
     the policy first maps the trace to all S masks, then the engine
     decodes the [S, n] ensemble.  `engine.batch_calls` before/after is
     the test hook for that invariant.
     """
 
-    def __init__(self, code: GradientCode, trace: LatencyTrace,
+    def __init__(self, code: Union[GradientCode, str], trace: LatencyTrace,
                  policy: Union[str, SyncPolicy] = "deadline", *,
                  decoder: str = "onestep", backend: str = "numpy",
                  s: Optional[int] = None, iters: int = 8,
-                 engine: Optional[DecodeEngine] = None, **policy_kw):
+                 engine: Optional[DecodeEngine] = None,
+                 code_seed: int = 0, **policy_kw):
+        if isinstance(code, str):
+            # scheme name -> registry build sized to the trace (k = n).
+            # Validate against the REQUESTED family (a registered alias
+            # may construct codes named after its base constructor).
+            if s is None:
+                raise ValueError(
+                    f"ClusterSim({code!r}, ...) needs an explicit s= "
+                    f"(tasks per worker) to build the code; a silent "
+                    f"default would misreport the frontier")
+            fam = registry.get(code)
+            code = fam.make(k=trace.n, n=trace.n, s=s, seed=code_seed)
+        else:
+            fam = registry.find(code.name)
+        if fam is not None:
+            fam.require_decoder(decoder)
         if trace.n != code.n:
             raise ValueError(f"trace has n={trace.n} workers but code has "
                              f"n={code.n}")

@@ -21,7 +21,7 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from ..core import codes as codes_lib
+from ..core import registry
 from .cluster import ClusterRunResult, ClusterSim, SyncPolicy, make_policy
 from .traces import LatencyTrace
 
@@ -72,15 +72,19 @@ def sweep_frontier(
     policy_kw: Optional[Dict[str, dict]] = None,
 ) -> List[FrontierPoint]:
     """One ClusterSim per (scheme, decoder, policy) cell over a shared
-    trace; every cell is exactly one batched decode."""
+    trace; every cell is exactly one batched decode.  Schemes resolve
+    through the registry; decoders a family does not declare are
+    skipped (so a mixed sweep can request the union of decoders)."""
     n = trace.n
     k = n if k is None else k
     policy_kw = policy_kw or {}
     out: List[FrontierPoint] = []
     for scheme in schemes:
-        code = codes_lib.make_code(scheme, k=k, n=n, s=s,
-                                   rng=np.random.default_rng(seed))
+        fam = registry.get(scheme)
+        code = fam.make(k=k, n=n, s=s, rng=np.random.default_rng(seed))
         for decoder in decoders:
+            if not fam.supports_decoder(decoder):
+                continue
             for pol in policies:
                 name = pol if isinstance(pol, str) else pol.name
                 policy = make_policy(pol, **policy_kw.get(name, {}))

@@ -119,9 +119,11 @@ def trace_from_model(model: StragglerModel, steps: int, n: int, *,
 
 
 # sources with first-class latency semantics; anything accepted by
-# make_straggler_model also works (lifted through the two-point map)
-TRACE_SOURCES = ("pareto", "bimodal", "correlated", "adversarial",
-                 "iid", "fixed", "none", "replay")
+# make_straggler_model also works (lifted through the two-point map).
+# 'clustered' is the block-correlated slow-episode source whose failing
+# blocks align with the SBM code's worker clusters (core.codes.block_ids)
+TRACE_SOURCES = ("pareto", "bimodal", "clustered", "correlated",
+                 "adversarial", "iid", "fixed", "none", "replay")
 
 
 def make_trace(source: str, steps: int = 0, n: int = 0, *,

@@ -35,8 +35,6 @@ weights are then row lookups.
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -45,8 +43,8 @@ import numpy as np
 
 from ..checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from ..core import assignment as ASG
-from ..core import codes as CODES
 from ..core import decoding as DEC
+from ..core import registry as REG
 from ..core.engine import DecodeEngine
 from ..data import CodedDataPipeline, PipelineConfig
 from ..dist import use_mesh
@@ -59,7 +57,10 @@ __all__ = ["CodedTrainConfig", "CodedTrainer", "explicit_master_decode_grads"]
 
 @dataclasses.dataclass
 class CodedTrainConfig:
-    code: str = "bgc"            # frc | bgc | rbgc | sregular | cyclic | uncoded
+    code: str = "bgc"            # any core.registry family name
+    code_params: dict = dataclasses.field(default_factory=dict)
+    #   family extras (e.g. sbm blocks/intra) — forwarded to the
+    #   constructor on every (re)build, elastic re-codes included
     n_workers: int = 8           # number of DP groups (paper's n); k = n
     s: int = 2                   # tasks per worker
     decoder: str = "onestep"     # onestep | optimal | algorithmic | ignore
@@ -134,8 +135,10 @@ class CodedTrainer:
     # ------------- code / assignment / pipeline -------------
     def _build_code(self, n: int) -> None:
         t = self.tcfg
-        self.code = CODES.make_code(t.code, k=n, n=n, s=min(t.s, n),
-                                    rng=self.rng)
+        fam = REG.get(t.code)     # actionable KeyError on unknown schemes
+        fam.require_decoder(t.decoder)
+        self.code = fam.make(k=n, n=n, s=min(t.s, n), rng=self.rng,
+                             **t.code_params)
         # one engine per live code; rebuilt (cache and all) on elastic
         # re-coding since the weights are a function of G
         self.engine = DecodeEngine(self.code, iters=t.decoder_iters,

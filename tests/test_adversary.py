@@ -115,7 +115,6 @@ class TestDkSReduction:
             for j in [0, 1, 2, 3]:
                 if i != j:
                     M[i, j] = 1
-        deg = M.sum(axis=1)
         # regularize: pad to 5-regular by adding a matching where needed
         # (skip regularity check by building objective manually)
         rho = 0.5

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro import configs as CFG
-from repro.models import SHAPES, build_model
+from repro.models import build_model
 
 pytestmark = pytest.mark.slow  # e2e forward/decode across all archs
 
@@ -105,9 +105,6 @@ def test_decode_matches_forward(arch):
 
     if cfg.family == "encdec":
         frames = jnp.asarray(rngs.normal(size=(B, 16, cfg.d_model)), jnp.float32)
-        batch_full = {"frames": frames, "tokens": toks,
-                      "labels": toks, "loss_weight": jnp.ones((B,))}
-        from repro.models import encdec as ED
         from repro.models.encdec import _cast, _encode, _make_cross_caches, _decode_tokens
         p = _cast(params, cfg)
         enc = _encode(p, cfg, frames)

@@ -114,6 +114,61 @@ def test_ragged_algorithmic_edge_masks():
     assert_allclose(np.asarray(X), W_np, atol=1e-4, rtol=1e-3)
 
 
+@pytest.mark.parametrize("n,B", [(29, 1), (52, 5), (127, 3), (7, 2)])
+def test_ragged_masked_gram_matches_xla(n, B):
+    """The batched masked-Gram kernel (normal-equations ensemble of the
+    least-squares decoder) at n not a multiple of the tile units."""
+    rng = np.random.default_rng(n)
+    G = (rng.random((n + 3, n)) < 0.2).astype(np.float32)
+    gram = G.T @ G
+    masks = rng.random((B, n)) < 0.6
+    want = np.asarray(ops.batched_masked_gram(
+        jnp.asarray(gram), jnp.asarray(masks), impl="xla"))
+    for bb, bi, bj in [(8, 128, 128), (2, 16, 16)]:
+        got = np.asarray(ops.batched_masked_gram(
+            jnp.asarray(gram), jnp.asarray(masks), impl="pallas_interpret",
+            bb=bb, bi=bi, bj=bj))
+        assert got.shape == (B, n, n)
+        # 0/1 supports: small-integer Gram entries are exact in fp32
+        assert_allclose(got, want, atol=0)
+    # straggler rows/columns are exactly zero
+    dead = ~masks[0]
+    assert np.all(want[0][dead, :] == 0) and np.all(want[0][:, dead] == 0)
+
+
+def test_ragged_masked_gram_edge_masks():
+    rng = np.random.default_rng(0)
+    G = (rng.random((29, 37)) < 0.2).astype(np.float32)
+    gram = G.T @ G
+    empty = np.zeros((1, 37), bool)
+    full = np.ones((1, 37), bool)
+    ge = np.asarray(ops.batched_masked_gram(
+        jnp.asarray(gram), jnp.asarray(empty), impl="pallas_interpret",
+        bb=2, bi=16, bj=16))
+    gf = np.asarray(ops.batched_masked_gram(
+        jnp.asarray(gram), jnp.asarray(full), impl="pallas_interpret",
+        bb=2, bi=16, bj=16))
+    assert_allclose(ge[0], np.zeros((37, 37)), atol=0)
+    assert_allclose(gf[0], gram, atol=0)
+
+
+def test_engine_gram_optimal_interpret_matches_numpy_ragged():
+    """DecodeEngine optimal decode through the kernel-backed gram path
+    equals the numpy gram path (same ridge) at a ragged n."""
+    code = C.make_code("expander", k=29, n=29, s=4,
+                       rng=np.random.default_rng(11))
+    rng = np.random.default_rng(12)
+    masks = rng.random((6, 29)) < 0.6
+    masks[0] = False
+    masks[1] = True
+    res_np = DecodeEngine(code, optimal_impl="gram").decode_batch(
+        masks, "optimal")
+    res_k = DecodeEngine(code, backend="pallas_interpret").decode_batch(
+        masks, "optimal")
+    assert_allclose(res_k.weights, res_np.weights, atol=0)
+    assert_allclose(res_k.errors, res_np.errors, atol=0)
+
+
 def test_engine_interpret_backend_ragged_code_and_edges():
     """DecodeEngine end-to-end on a ragged-n code with edge-mask rows
     mixed into the batch, pallas_interpret vs numpy, dense and ELL."""

@@ -5,9 +5,11 @@ Three layers of trust for the shard_map coded aggregation:
   * DIFFERENTIAL — an fp64 subprocess (8 forced host devices, x64 on)
     proves the shard_map path identical to the single-process oracle
     ``explicit_master_decode_grads`` to 1e-10 for every
-    {frc, bgc, cyclic} x {onestep, optimal} x {all-alive, deadline-mask}
-    cell, and the decoded gradient identical to the plain uncoded
-    gradient when the mask is all-alive and the decode exact.
+    registry-family x {onestep, optimal} x {all-alive, deadline-mask}
+    cell (the scheme list is DERIVED from core.registry, so new
+    families — sbm, expander — hit the 8-device lane the day they are
+    registered), and the decoded gradient identical to the plain
+    uncoded gradient when the mask is all-alive and the decode exact.
   * PROPERTY — worker->device partitioning, per-device batch slicing and
     the ELL packing hold at ragged shapes (n not a multiple of the
     device count, k not a multiple of n, a single-device mesh).
@@ -34,6 +36,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import codes as CODES
+from repro.core import registry as REG
 from repro.core.assignment import build_assignment
 from repro.core.engine import DecodeEngine
 from repro.data import CodedDataPipeline, PipelineConfig
@@ -42,6 +45,17 @@ from repro.sim.cluster import ClusterSim
 from repro.sim.traces import make_trace
 
 REPO = Path(__file__).resolve().parent.parent
+
+# The differential scheme list comes from the registry: every family
+# that constructs at the (n=8, s=2) differential cell joins the fp64
+# suite automatically.  uncoded is skipped (no redundancy to decode);
+# rbgc / sregular are column-regularized members of the same Bernoulli
+# class as bgc and are left to the cheaper property suites to keep the
+# 8-device lane inside its time budget.
+DIFF_SCHEMES = tuple(
+    f.name for f in REG.families()
+    if f.name not in ("uncoded", "rbgc", "sregular")
+    and f.check(8, 8, 2) is None)
 
 
 # ==========================================================================
@@ -295,10 +309,13 @@ _TOY_MODEL = """
 
 def test_differential_shard_map_vs_master_oracle_fp64():
     """shard_map aggregation == explicit_master_decode_grads to 1e-10
-    (fp64) for {frc, bgc, cyclic} x {onestep, optimal} x {all-alive,
-    deadline-policy mask}, on a real 8-device worker mesh; the decode
-    weight streams of the two paths agree to 1e-12."""
-    res = _run_subprocess(prelude=_TOY_MODEL, body="""
+    (fp64) for every registry family in DIFF_SCHEMES x {onestep,
+    optimal} x {all-alive, deadline-policy mask}, on a real 8-device
+    worker mesh; the decode weight streams of the two paths agree to
+    1e-12."""
+    res = _run_subprocess(prelude=_TOY_MODEL, body=f"""
+        SCHEMES = {DIFF_SCHEMES!r}
+    """ + """
         from repro.training import CodedTrainConfig, CodedTrainer
         from repro.training.train_loop import explicit_master_decode_grads
         from repro.sim.cluster import DeadlinePolicy
@@ -308,7 +325,7 @@ def test_differential_shard_map_vs_master_oracle_fp64():
         trace = make_trace("pareto", steps=4, n=8, seed=11)
         mask_dead = DeadlinePolicy(1.5).step(trace.latencies[0])[0]
         cells = []
-        for scheme in ("frc", "bgc", "cyclic"):
+        for scheme in SCHEMES:
             for decoder in ("onestep", "optimal"):
                 tr = CodedTrainer(model, CodedTrainConfig(
                     code=scheme, n_workers=8, s=2, decoder=decoder,
@@ -336,7 +353,10 @@ def test_differential_shard_map_vs_master_oracle_fp64():
             "n_devices": jax.device_count(), "cells": cells}))
     """)
     assert res["n_devices"] == 8
-    assert len(res["cells"]) == 12
+    # sbm and expander genuinely ride the 8-device lane, not just the
+    # seed trio
+    assert {"sbm", "expander"} <= set(DIFF_SCHEMES)
+    assert len(res["cells"]) == len(DIFF_SCHEMES) * 2 * 2
     for c in res["cells"]:
         tol = 1e-10 * max(c["scale"], 1.0) + 1e-12
         assert c["absdiff"] < tol, c

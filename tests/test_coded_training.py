@@ -1,7 +1,6 @@
 """Integration tests: coded training loop, fused-vs-master-decode
 equivalence, checkpoint/restart, elasticity, compression."""
 
-import os
 
 import jax
 import jax.numpy as jnp
@@ -9,11 +8,10 @@ import numpy as np
 import pytest
 
 from repro import configs as CFG
-from repro.core import decoding as DEC
 from repro.models import build_model
 from repro.optim import OptConfig
-from repro.runtime import (FaultInjector, FaultPlan, FixedFractionStragglers,
-                           NoStragglers)
+from repro.runtime import (FaultInjector, FaultPlan,
+                           FixedFractionStragglers)
 from repro.training import (CodedTrainConfig, CodedTrainer,
                             explicit_master_decode_grads)
 
@@ -117,7 +115,7 @@ class TestCheckpointRestart:
         d = str(tmp_path / "ckpt")
         # run 6 steps with checkpoint every 3
         tr1 = make_trainer(model, steps=6, ckpt_dir=d, ckpt_every=3)
-        out1 = tr1.run()
+        tr1.run()
         # fresh trainer restores step-6 state and continues to 9
         tr2 = make_trainer(model, steps=6, ckpt_dir=d, ckpt_every=3)
         state = tr2.init_state()

@@ -62,7 +62,6 @@ class TestRBGC:
             assert code.max_col_degree <= 2 * code.s
 
     def test_pruned_columns_have_degree_s(self):
-        rng = RNG(11)
         k, s = 300, 2
         raw = (np.random.default_rng(11).random((k, k)) < (s / k)).astype(float)
         code = C.rbgc(k=k, n=k, s=s, rng=RNG(11))
@@ -102,7 +101,6 @@ class TestCyclicAndUncoded:
 
 def test_registry_roundtrip():
     for name in ["frc", "bgc", "rbgc", "sregular", "cyclic", "uncoded"]:
-        kw = {}
         code = C.make_code(name, k=20, n=20, s=4, seed=9)
         assert code.k == 20 and code.n == 20
 

@@ -125,7 +125,6 @@ class TestAlgorithmicDecoder:
         nu = r * 16 / 16  # r s^2 / k with s=4, k=16 -> r*1... keep general
         nu = r * 4**2 / 16
         u1 = D.algorithmic_error_curve(A, iters=1, nu=nu)[1]
-        rho = D.default_rho(16, r, 4)
         # identity holds only when A's row sums are exactly r*s/k; FRC with
         # partial losses breaks it, so we assert the documented inequality
         assert u1 >= D.err(A) - 1e-9

@@ -1,7 +1,6 @@
 """Unit tests for model internals: sequence-impl equivalences and the MoE
 dispatch against its dense oracle."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

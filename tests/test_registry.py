@@ -1,0 +1,289 @@
+"""Scheme-registry property suite (ISSUE 4 satellite).
+
+Three contracts every registered family must honor:
+
+  * CONSTRUCTION — the family constructs at ragged sizes (n not a
+    multiple of 8) for every s it declares legal there, and the
+    resulting GradientCode round-trips its own name through the
+    registry (elastic with_workers depends on that).
+  * DECODE EQUIVALENCE — for every (family, decoder) pair the registry
+    declares compatible, the batched DecodeEngine weights equal the
+    scalar decoding.* oracles per mask.
+  * ERRORS — unknown schemes and invalid (k, n, s) raise actionable
+    messages (what exists, what is legal, how to register).
+"""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core import codes as C
+from repro.core import decoding as D
+from repro.core import registry as R
+from repro.core.engine import DecodeEngine
+
+RAGGED_NS = (7, 13, 26)         # n not a multiple of 8
+
+
+def _pick_s(fam, k, n, want=3):
+    """A legal s for this family at (k, n), as close to `want` as
+    possible (FRC needs s | k, s-regular needs k*s even, ...)."""
+    legal = fam.legal_s(k, n, hi=min(k, 8))
+    assert legal, f"{fam.name} has no legal s at (k={k}, n={n})"
+    return min(legal, key=lambda s: (abs(s - want), s))
+
+
+# ==========================================================================
+# construction at ragged sizes
+# ==========================================================================
+
+
+@pytest.mark.parametrize("n", RAGGED_NS)
+@pytest.mark.parametrize("fam", R.families(), ids=lambda f: f.name)
+def test_every_family_constructs_ragged(fam, n):
+    s = _pick_s(fam, n, n)
+    code = fam.make(k=n, n=n, s=s, seed=0)
+    assert code.G.shape == (n, n)
+    assert code.name == fam.name        # with_workers rebuilds by name
+    assert np.isfinite(code.G).all()
+    # determinism given the seed
+    again = fam.make(k=n, n=n, s=s, seed=0)
+    assert np.array_equal(code.G, again.G)
+    # the ELL packing (kernel-facing view) holds at ragged sizes too
+    idx, val = code.ell()
+    dense = np.zeros_like(code.G)
+    for i in range(code.k):
+        np.add.at(dense[i], idx[i], val[i])
+    assert_allclose(dense, code.G)
+
+
+def test_registry_names_cover_code_registry():
+    """The declarative layer and the raw constructor table agree."""
+    assert set(R.names()) == set(C.CODE_REGISTRY)
+
+
+def test_make_code_delegates_to_registry():
+    a = C.make_code("sbm", k=20, n=20, s=4, seed=9, blocks=2)
+    b = R.make("sbm", k=20, n=20, s=4, seed=9, blocks=2)
+    assert np.array_equal(a.G, b.G)
+
+
+def test_randomized_declarations():
+    assert set(R.randomized_schemes()) == {"bgc", "rbgc", "sregular",
+                                           "sbm", "expander"}
+
+
+# ==========================================================================
+# new families: structural properties
+# ==========================================================================
+
+
+@pytest.mark.parametrize("k,n,s", [(13, 13, 4), (26, 26, 5), (40, 30, 6)])
+def test_expander_biregular_at_ragged_sizes(k, n, s):
+    code = R.make("expander", k=k, n=n, s=s, seed=1)
+    assert np.all(code.col_degrees == s)            # workers: exactly s
+    lo, hi = (n * s) // k, -(-(n * s) // k)
+    assert code.row_degrees.min() >= lo             # tasks: ns/k +- 1
+    assert code.row_degrees.max() <= hi
+
+
+def test_sbm_intra_inter_densities():
+    code = R.make("sbm", k=64, n=64, s=8, seed=2, blocks=4, intra=0.9)
+    member_t = C.block_ids(64, 4)
+    member_w = C.block_ids(64, 4)
+    same = member_t[:, None] == member_w[None, :]
+    assert code.G[same].mean() > 5 * code.G[~same].mean()
+    # expected column degree calibrated to s
+    assert abs(code.col_degrees.mean() - 8) < 2.0
+
+
+def test_sbm_single_block_degenerates_to_bernoulli():
+    code = R.make("sbm", k=50, n=50, s=5, seed=3, blocks=1)
+    assert abs(code.density - 5 / 50) < 0.05
+
+
+@pytest.mark.parametrize("k,s,blocks,intra", [(32, 10, 8, 0.9),
+                                              (100, 10, 8, 0.95),
+                                              (64, 8, 4, 0.1)])
+def test_sbm_degree_calibrated_even_when_a_side_saturates(k, s, blocks,
+                                                          intra):
+    """E[column degree] == s even when intra*s exceeds the own-cluster
+    task count (the saturated side spills to the other side instead of
+    dropping mass — regression: s=10, blocks=8 gave mean degree 5)."""
+    degs = [R.make("sbm", k=k, n=k, s=s, seed=t, blocks=blocks,
+                   intra=intra).col_degrees.mean() for t in range(8)]
+    assert abs(np.mean(degs) - s) < 0.35 * np.sqrt(s)
+
+
+def test_with_workers_preserves_family_params():
+    """Elastic rebuild keeps the VARIANT, not the family defaults
+    (regression: an sbm intra=0.1 code silently became intra=0.7)."""
+    code = R.make("sbm", k=64, n=64, s=6, seed=0, blocks=2, intra=0.1)
+    assert dict(code.params) == {"blocks": 2, "intra": 0.1}
+    rng = np.random.default_rng(1)
+    smaller = code.with_workers(32, rng)
+    assert smaller.n == 32 and smaller.name == "sbm"
+    assert dict(smaller.params) == {"blocks": 2, "intra": 0.1}
+    # and the rebuilt support really is the low-intra variant
+    expect = R.make("sbm", k=32, n=32, s=6,
+                    rng=np.random.default_rng(1), blocks=2, intra=0.1)
+    assert np.array_equal(smaller.G, expect.G)
+
+
+def test_trainer_forwards_code_params():
+    """CodedTrainConfig.code_params reach the constructor on build and
+    survive elastic re-coding (the rebuild goes through fam.make with
+    the same params)."""
+    import types
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.training import CodedTrainConfig, CodedTrainer
+
+    class ToyModel:
+        cfg = types.SimpleNamespace(vocab=32, schedule="cosine")
+
+        def init(self, key):
+            return {"w": jax.random.normal(key, (16,)) * 0.1}
+
+        def loss_fn(self, params, batch):
+            x = batch["tokens"].astype(jnp.float32)
+            row = (x @ params["w"]) ** 2
+            wloss = (row * batch["loss_weight"].astype(jnp.float32)).sum()
+            return wloss, {"loss": wloss, "mean_ce": row.mean()}
+
+    tr = CodedTrainer(ToyModel(), CodedTrainConfig(
+        code="sbm", n_workers=16, s=4, seq_len=16,
+        code_params={"blocks": 2, "intra": 0.1}))
+    assert dict(tr.code.params) == {"blocks": 2, "intra": 0.1}
+    tr._build_code(12)                           # elastic rebuild
+    assert tr.code.n == 12
+    assert dict(tr.code.params) == {"blocks": 2, "intra": 0.1}
+
+
+@pytest.mark.parametrize("k,n", [(2, 8), (8, 2), (3, 3)])
+def test_sbm_more_blocks_than_tasks_or_workers(k, n):
+    """blocks > min(k, n) must clip on BOTH sides, not index past the
+    smaller partition (regression: k=2, n=8, blocks=4 raised)."""
+    code = R.make("sbm", k=k, n=n, s=min(2, k), seed=0, blocks=4)
+    assert code.G.shape == (k, n)
+    assert np.isfinite(code.G).all()
+
+
+# ==========================================================================
+# batched engine decode == scalar decode, per declared (family, decoder)
+# ==========================================================================
+
+
+def _scalar_weights(G, mask, decoder, iters):
+    if decoder == "algorithmic":
+        return D.decode_weights(G, mask, method=decoder, iters=iters)
+    return D.decode_weights(G, mask, method=decoder)
+
+
+@pytest.mark.parametrize("fam", R.families(), ids=lambda f: f.name)
+def test_batched_decode_matches_scalar_per_declared_decoder(fam):
+    n = 13                                  # ragged on purpose
+    s = _pick_s(fam, n, n)
+    code = fam.make(k=n, n=n, s=s, seed=4)
+    rng = np.random.default_rng(5)
+    masks = rng.random((8, n)) < 0.7
+    masks[0] = True                         # no stragglers
+    masks[1] = False                        # all stragglers
+    eng = DecodeEngine(code, iters=4)
+    for decoder in fam.decoders:
+        res = eng.decode_batch(masks, decoder)
+        assert res.weights.shape == (8, n)
+        assert np.all(np.isfinite(res.errors))
+        for b, mask in enumerate(masks):
+            want = _scalar_weights(code.G, mask, decoder, iters=4)
+            assert_allclose(res.weights[b], want, atol=1e-6,
+                            err_msg=f"{fam.name}/{decoder} mask {b}")
+
+
+@pytest.mark.parametrize("fam_name", ["sbm", "expander"])
+def test_gram_optimal_errors_match_pinv(fam_name):
+    """The masked-Gram least-squares path (the new families' fast
+    decoder) agrees with the exact pinv path on decode errors."""
+    fam = R.get(fam_name)
+    code = fam.make(k=26, n=26, s=4, seed=6)
+    rng = np.random.default_rng(7)
+    masks = rng.random((12, 26)) < 0.6
+    r_pinv = DecodeEngine(code).decode_batch(masks, "optimal")
+    r_gram = DecodeEngine(code, optimal_impl="gram").decode_batch(
+        masks, "optimal")
+    assert_allclose(r_gram.errors, r_pinv.errors, atol=1e-6, rtol=1e-6)
+    r_int = DecodeEngine(code, backend="pallas_interpret").decode_batch(
+        masks, "optimal")
+    # 0/1 supports: the kernel's fp32 masked Gram is exact, so the
+    # interpret backend reproduces the numpy gram path bit-for-bit
+    assert_allclose(r_int.weights, r_gram.weights, atol=0)
+
+
+# ==========================================================================
+# actionable errors
+# ==========================================================================
+
+
+def test_unknown_scheme_error_is_actionable():
+    with pytest.raises(KeyError) as ei:
+        R.get("fountain")
+    msg = str(ei.value)
+    assert "fountain" in msg
+    assert "bgc" in msg                     # lists what IS registered
+    assert "register" in msg                # says how to add one
+
+
+def test_unknown_scheme_error_reaches_every_layer():
+    from repro.sim.traces import make_trace
+    from repro.training import CodedTrainConfig, CodedTrainer
+
+    with pytest.raises(KeyError, match="fountain"):
+        C.make_code("fountain", k=8, n=8, s=2)
+    trace = make_trace("pareto", steps=4, n=8, seed=0)
+    from repro.sim.cluster import ClusterSim
+    with pytest.raises(KeyError, match="fountain"):
+        ClusterSim("fountain", trace, "deadline", s=2)
+    with pytest.raises(KeyError, match="fountain"):
+        CodedTrainer(object(), CodedTrainConfig(code="fountain"))
+
+
+def test_illegal_params_error_names_legal_s():
+    with pytest.raises(ValueError) as ei:
+        R.make("frc", k=10, n=10, s=3)      # 3 does not divide 10
+    msg = str(ei.value)
+    assert "legal s" in msg and "frc" in msg
+
+
+def test_incompatible_decoder_rejected_by_trainer_and_sim():
+    fam = R.get("frc")
+    narrow = R.CodeFamily(
+        name="frc_onestep_only", constructor=fam.constructor,
+        decoders=("onestep",), adversary="block", validate=fam.validate)
+    R.register(narrow)
+    try:
+        from repro.sim.cluster import ClusterSim
+        from repro.sim.traces import make_trace
+        trace = make_trace("pareto", steps=4, n=8, seed=0)
+        with pytest.raises(ValueError, match="onestep"):
+            ClusterSim("frc_onestep_only", trace, "deadline",
+                       decoder="optimal", s=2)
+        from repro.core.simulate import monte_carlo_error
+        with pytest.raises(ValueError, match="onestep"):
+            monte_carlo_error("frc_onestep_only", k=8, n=8, s=2, delta=0.2,
+                              trials=4, decoder="optimal")
+    finally:
+        R._REGISTRY.pop("frc_onestep_only", None)
+
+
+def test_register_rejects_duplicates_and_bad_records():
+    fam = R.get("bgc")
+    with pytest.raises(ValueError, match="already registered"):
+        R.register(fam)
+    with pytest.raises(ValueError, match="unknown"):
+        R.CodeFamily(name="x", constructor=fam.constructor,
+                     decoders=("onestep", "magic"))
+    with pytest.raises(ValueError, match="adversary"):
+        R.CodeFamily(name="x", constructor=fam.constructor,
+                     adversary="quantum")

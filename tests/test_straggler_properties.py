@@ -13,7 +13,8 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core.simulate import sample_straggler_mask, sample_straggler_masks
-from repro.runtime.straggler import (BimodalStragglers, CorrelatedStragglers,
+from repro.runtime.straggler import (BimodalStragglers, ClusteredStragglers,
+                                     CorrelatedStragglers,
                                      DeadlineStragglers,
                                      FixedFractionStragglers, IIDStragglers,
                                      NoStragglers, StragglerModel)
@@ -26,6 +27,8 @@ MODEL_BUILDERS = {
     "correlated": lambda seed: CorrelatedStragglers(pod_size=4, p_pod=0.1,
                                                     seed=seed),
     "bimodal": lambda seed: BimodalStragglers(slow_fraction=0.2, seed=seed),
+    "clustered": lambda seed: ClusteredStragglers(blocks=4, p_block=0.3,
+                                                  seed=seed),
 }
 
 
@@ -92,6 +95,31 @@ def test_bimodal_slow_set_is_persistent(seed, n):
         if slow.any() and (~slow).any():
             assert lat[slow].min() > lat[~slow].max()
     np.testing.assert_array_equal(m.sample(5, n), m.latencies(5, n) <= 1.5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(8, 64),
+       step=st.integers(0, 500))
+def test_clustered_blocks_fail_together(seed, n, step):
+    """ClusteredStragglers: within one step, every worker of a block
+    shares the block's fast/slow mode, the block partition matches the
+    SBM code's block_ids rule, and the slow set is constant across an
+    episode."""
+    from repro.core.codes import block_ids
+
+    m = ClusteredStragglers(blocks=4, p_block=0.3, episode=8, seed=seed)
+    member = block_ids(n, 4)
+    lat = m.latencies(step, n)
+    slow_blocks = m.slow_blocks(step)
+    # jitter is multiplicative and small: mode = latency rounded to the
+    # nearer of (fast, slow)
+    is_slow = np.abs(lat - m.slow) < np.abs(lat - m.fast)
+    np.testing.assert_array_equal(is_slow, slow_blocks[member])
+    # episode persistence: steps in the same epoch share slow blocks
+    epoch_start = (step // 8) * 8
+    np.testing.assert_array_equal(m.slow_blocks(epoch_start), slow_blocks)
+    np.testing.assert_array_equal(m.sample(step, n),
+                                  lat <= m.deadline)
 
 
 # ----------------------- batched mask sampling ------------------------------
