@@ -10,7 +10,7 @@ Per (arch x shape), single-pod mesh (per the brief):
 HLO terms come from the two reduced-depth UNROLLED variants (1 and 2
 pattern groups) extrapolated linearly to full depth — XLA counts a scan
 (`while`) body once, so the full-model cost_analysis undercounts by
-~n_layers (DESIGN.md Sec. 6).  Chunked-attention inner loops are likewise
+~n_layers (docs/architecture.md §6).  Chunked-attention inner loops are likewise
 counted once even in the unrolled variants; an ANALYTIC attention
 correction (flops + flash-style bytes) is added per attention layer and
 reported in its own columns for transparency.

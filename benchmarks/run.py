@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--trials N]
 
-Runs, in order (E-numbers from DESIGN.md Sec. 4):
+Runs, in order (E-numbers from docs/architecture.md §4):
     E1-E3  fig_errors        Figs 2-4: err1/err vs delta per scheme
     E4     fig5_algorithmic  Fig 5: ||u_t||^2/k curves
     E5     theory_check      Thms 5/6/7/8/21 closed forms vs Monte Carlo

@@ -20,10 +20,21 @@ Two parts:
 
   4. Device validation — frontier corner cells re-run through
      ClusterSim.run_distributed(): the same masks decoded by the REAL
-     shard_map coded all-reduce (DESIGN.md §9) with basis task
-     gradients, whose on-device errors must match the analytic ones.
-     Run under XLA_FLAGS=--xla_force_host_platform_device_count=8 for
-     a true multi-device mesh; one device still validates the path.
+     shard_map coded all-reduce (docs/architecture.md §9) with basis
+     task gradients, whose on-device errors must match the analytic
+     ones.  Run under XLA_FLAGS=--xla_force_host_platform_device_count=8
+     for a true multi-device mesh; one device still validates the path.
+
+  5. Adaptive policy column — the AdaptiveCoder closed loop
+     (docs/adaptive.md) at n = 256 on the bimodal and clustered traces,
+     against the full static (policy x decoder) grid at the same
+     reference replication.  The gate: the adaptive cell's
+     time-to-target beats EVERY static (policy, decoder) cell's on both
+     traces, tracked as the `adaptive_advantage` baseline ratios.  The
+     hindsight-optimal static cell over the full (s, policy, decoder)
+     axis — an offline pick that requires full-trace knowledge — is
+     reported informationally as the controller's online regret, not
+     gated.
 
 Artifacts: artifacts/bench/wallclock_frontier.{json,csv}.
 """
@@ -36,7 +47,7 @@ import numpy as np
 
 from repro.core import decoding, registry
 from repro.sim import (ClusterSim, make_policy, make_trace, pareto_front,
-                       sweep_frontier)
+                       sweep_adaptive, sweep_frontier)
 from .common import ascii_curves, best_of, save_csv, save_json
 
 # the frontier sweep covers the paper trio plus the follow-up families
@@ -65,7 +76,8 @@ def _per_step_loop(code, trace, policy):
 
 
 def run(n: int = 64, steps: int = 400, s: int = 8, seed: int = 0,
-        gate_n: int = 256, gate_steps: int = 2000):
+        gate_n: int = 256, gate_steps: int = 2000,
+        adaptive_n: int = 256, error_budget: float = 0.1):
     for scheme in SCHEMES:          # fail fast on unregistered schemes
         registry.get(scheme)
     trace = make_trace("pareto", steps=steps, n=n, deadline=1.5,
@@ -162,6 +174,60 @@ def run(n: int = 64, steps: int = 400, s: int = 8, seed: int = 0,
     print(f"device validation (frc, deadline, {n_dev} device(s)): "
           + "  ".join(f"{d}: max dev {v:.2e}" for d, v in dist_devs.items()))
 
+    # ---- 5. adaptive policy column (AdaptiveCoder, n = 256) ----
+    # the closed loop against the FULL static grid on the two traces
+    # where offline tuning hurts most: persistent slow nodes (bimodal)
+    # and block-correlated episodes (clustered).  Every static cell
+    # shares the adaptive run's reference s, so step times compare 1:1.
+    adaptive_rows = []
+    adaptive_ok = {}
+    for tname, tkw in (("bimodal", {}),
+                       ("clustered", dict(blocks=4, p_block=0.25,
+                                          episode=8))):
+        atrace = make_trace(tname, steps=steps, n=adaptive_n, seed=seed,
+                            **tkw)
+        static = sweep_frontier(("bgc",), POLICY_GRID, atrace, s=s,
+                                seed=seed, decoders=("onestep", "optimal"))
+        apt = sweep_adaptive(("bgc",), atrace, s=s,
+                             error_budget=error_budget, seed=seed)[0]
+        best_static = min(static, key=lambda p: p.time_to_target)
+        adaptive_ok[tname] = all(
+            apt.time_to_target < p.time_to_target for p in static)
+        advantage = best_static.time_to_target / apt.time_to_target
+        adaptive_rows += [dict(p.as_dict(), trace=tname)
+                          for p in static + [apt]]
+        print(f"\nadaptive column ({tname}, n={adaptive_n}, budget "
+              f"{error_budget}): t={apt.mean_step_time:.3f}s "
+              f"err={apt.mean_error:.4f} "
+              f"t_target={apt.time_to_target:,.1f}s  vs best static "
+              f"{best_static.policy}/{best_static.decoder} "
+              f"t_target={best_static.time_to_target:,.1f}s  "
+              f"-> advantage {advantage:.2f}x")
+        adaptive_ok[f"advantage_{tname}"] = advantage
+
+        # INFORMATIONAL (not gated): the hindsight-optimal static cell
+        # with the s axis included — each (s', policy, decoder) cell's
+        # modelled time charged s'/s for compute (the controller's own
+        # model) and filtered to the error budget.  An offline pick with
+        # full-trace knowledge beats a prefix-learning controller by the
+        # usual online regret; this reports that gap honestly instead of
+        # letting the fixed-s gate imply "better than any offline pick".
+        hindsight = []
+        for s_static in (2, 4, 8, 16):
+            for p in sweep_frontier(("bgc",), POLICY_GRID, atrace,
+                                    s=s_static, seed=seed,
+                                    decoders=("onestep", "optimal")):
+                if p.mean_error <= error_budget:
+                    hindsight.append(
+                        (p.time_to_target * s_static / s, s_static, p))
+        if hindsight:
+            h_ttt, h_s, h_p = min(hindsight, key=lambda r: r[0])
+            regret = apt.time_to_target / h_ttt
+            adaptive_ok[f"hindsight_regret_{tname}"] = regret
+            print(f"  hindsight-optimal static (s axis, budget-feasible): "
+                  f"s={h_s} {h_p.policy}/{h_p.decoder} "
+                  f"t_target={h_ttt:,.1f}s -> online regret {regret:.2f}x")
+
     n_cells = len({(r["scheme"], r["policy"]) for r in rows})
     # the new families must reach the frontier with BOTH decoders (the
     # registry acceptance: no more hardcoded {frc, bgc, cyclic} walls)
@@ -184,6 +250,12 @@ def run(n: int = 64, steps: int = 400, s: int = 8, seed: int = 0,
         # fp32 on-device vs fp64 analytic: 1e-4 absorbs the cast only
         "dist_errors_match_analytic_1e-4": bool(
             max(dist_devs.values()) <= 1e-4),
+        # the adaptive controller beats EVERY static (policy, decoder)
+        # cell on time-to-target, both traces — the closed loop finds a
+        # better operating point than any offline pick
+        "adaptive_dominates_static_bimodal": bool(adaptive_ok["bimodal"]),
+        "adaptive_dominates_static_clustered": bool(
+            adaptive_ok["clustered"]),
     }
     payload = {
         "trace": {"source": trace.source, "steps": steps, "n": n},
@@ -195,6 +267,15 @@ def run(n: int = 64, steps: int = 400, s: int = 8, seed: int = 0,
         "clustered_trace": clustered_rows,
         "dist_validation": {"n_devices": int(n_dev),
                             "max_dev_by_decoder": dist_devs},
+        "adaptive": {"n": adaptive_n, "error_budget": error_budget,
+                     "rows": adaptive_rows,
+                     "advantage_bimodal": adaptive_ok["advantage_bimodal"],
+                     "advantage_clustered":
+                         adaptive_ok["advantage_clustered"],
+                     "hindsight_regret_bimodal":
+                         adaptive_ok.get("hindsight_regret_bimodal"),
+                     "hindsight_regret_clustered":
+                         adaptive_ok.get("hindsight_regret_clustered")},
         "checks": checks,
     }
     save_json("wallclock_frontier", payload)
@@ -209,9 +290,12 @@ def main(argv=None) -> int:
     ap.add_argument("--s", type=int, default=8)
     ap.add_argument("--gate-n", type=int, default=256)
     ap.add_argument("--gate-steps", type=int, default=2000)
+    ap.add_argument("--adaptive-n", type=int, default=256)
+    ap.add_argument("--error-budget", type=float, default=0.1)
     args = ap.parse_args(argv)
     rep = run(n=args.n, steps=args.steps, s=args.s, gate_n=args.gate_n,
-              gate_steps=args.gate_steps)
+              gate_steps=args.gate_steps, adaptive_n=args.adaptive_n,
+              error_budget=args.error_budget)
     print("wallclock frontier checks:", rep["checks"])
     ok = all(rep["checks"].values())
     print("PASS" if ok else "MISMATCH")

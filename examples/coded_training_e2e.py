@@ -10,7 +10,7 @@ configs are exercised via the dry-run; this is the runnable-on-CPU
 driver).  Demonstrates, in one run:
 
   * BGC code construction + per-step decode-weight computation,
-  * decode-as-loss-reweighting training (DESIGN.md 2.1),
+  * decode-as-loss-reweighting training (docs/architecture.md §2.1),
   * deadline stragglers (Pareto tail) absorbed as decode error,
   * async checkpointing + restart-from-latest,
   * a hard node failure at 2/3 progress -> elastic re-code to n-1 workers.

@@ -1,4 +1,12 @@
-"""Atomic, resumable checkpointing."""
+"""Atomic, resumable checkpointing.
+
+Public surface: ``save_checkpoint`` / ``restore_checkpoint`` /
+``latest_step`` (atomic directory-swap persistence of params +
+optimizer state + metadata) and ``AsyncCheckpointer`` (background
+thread, keeps the last K checkpoints; the trainer's ``ckpt_every``
+path).  Restores compose with the trainer's elastic re-coding:
+optimizer state survives worker-count changes.
+"""
 
 from .checkpoint import (  # noqa: F401
     AsyncCheckpointer,

@@ -3,7 +3,7 @@
 
 32L d_model=1536 24H (GQA kv=8) d_ff=512/expert vocab=49155, MoE 40e
 top-8.  40 experts do not divide the 16-way model axis, so experts are
-sharded *internally* (d_ff tensor-parallel) — see DESIGN.md Sec. 2.4.
+sharded *internally* (d_ff tensor-parallel) — see docs/architecture.md §2.4.
 """
 
 from repro.models import ArchConfig, MoEConfig

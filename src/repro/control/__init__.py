@@ -1,0 +1,32 @@
+"""AdaptiveCoder: online straggler estimation + dynamic redundancy
+control (docs/adaptive.md).
+
+Public surface:
+
+  * ``StragglerEstimator`` / ``EstimatorState`` — EW per-worker erasure
+    rates, block-correlation score, tail-latency quantiles, realized
+    decode error (estimator.py);
+  * ``ControlConfig`` / ``Action`` / ``AdaptivePolicy`` / ``error_band``
+    — the error-budget controller with hysteresis over the three action
+    kinds set_s / set_decoder / set_deadline (policy.py);
+  * ``AdaptiveCoder`` / ``ScriptedController`` — the controller
+    protocol ``CodedTrainer(controller=...)`` consumes, and
+    ``run_adaptive_sim`` / ``adaptive_frontier_point`` — the
+    co-simulation loop behind E11's ``adaptive_coder`` policy column
+    (runner.py).
+"""
+
+from .estimator import EstimatorState, StragglerEstimator  # noqa: F401
+from .policy import (  # noqa: F401
+    Action,
+    AdaptivePolicy,
+    ControlConfig,
+    error_band,
+)
+from .runner import (  # noqa: F401
+    AdaptiveCoder,
+    AdaptiveRunResult,
+    ScriptedController,
+    adaptive_frontier_point,
+    run_adaptive_sim,
+)

@@ -1,0 +1,206 @@
+"""Online straggler-model estimation: what the cluster is actually doing.
+
+The frontier sweep (E11) tells the user *after* a run which
+`(s, decoder, deadline)` they should have picked; this module is the
+observation half of closing that loop at runtime.  A
+:class:`StragglerEstimator` ingests one `(mask, latencies)` observation
+per step — from a :class:`~repro.sim.traces.LatencyTrace` row in
+simulation, or from real per-worker step times in a live job — and
+maintains:
+
+  * **per-worker erasure rates** — exponentially weighted
+    (bias-corrected, Adam-style) so a persistently slow node
+    (`BimodalStragglers`) separates from iid noise within
+    ~1/alpha steps;
+  * **block-correlation score** — do erasures cluster by worker block
+    (the shared :func:`~repro.core.codes.block_ids` partition the SBM
+    code and the clustered trace source both use)?  +1 means stragglers
+    always share a block (Charles & Papailiopoulos's regime, where
+    cross-cluster replication wins), 0 means placement-independent;
+  * **tail-latency quantiles and a sliding latency window** — so the
+    controller can ask what-if questions: the erasure fraction and the
+    expected step time any candidate deadline would have produced;
+  * **realized decode error** — EW mean of the per-step decode error
+    the trainer/simulator actually observed, used to calibrate the
+    closed-form error bands of :mod:`repro.core.theory` online.
+
+Everything is O(n) per step and a pure function of the observations,
+so fused and distributed trainers fed identical masks derive identical
+estimates (the SPMD no-communication property extends to the control
+loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core.codes import block_ids
+
+__all__ = ["EstimatorState", "StragglerEstimator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimatorState:
+    """Snapshot the controller consumes; all fields bias-corrected."""
+
+    steps: int  # observations ingested
+    erasure: np.ndarray  # [n] per-worker EW erasure rate
+    mean_erasure: float  # fleet-wide straggler fraction
+    block_corr: float  # within-block erasure clustering, [-1, 1]
+    err_ew: Optional[float]  # EW realized decode error / k (if fed)
+    quantiles: Dict[float, float]  # latency quantiles over the window
+    lat_rows: Optional[np.ndarray] = None  # [W, n] latency window view
+
+    def latency_quantile(self, q: float, default: float = 1.5) -> float:
+        """Interpolated latency quantile from the window (controller's
+        deadline lookup); `default` when no latencies were observed."""
+        if not self.quantiles:
+            return default
+        qs = sorted(self.quantiles)
+        vs = [self.quantiles[x] for x in qs]
+        return float(np.interp(q, qs, vs))
+
+    def erasure_at(self, deadline: float) -> float:
+        """Straggler fraction a given deadline would have produced over
+        the window — the controller's what-if erasure lookup."""
+        if self.lat_rows is None or not self.lat_rows.size:
+            return self.mean_erasure
+        return float((self.lat_rows > deadline).mean())
+
+    def step_time_at(self, deadline: float) -> float:
+        """Expected modelled step seconds under a candidate deadline:
+        E[min(deadline, max_j latency_j)] over the window."""
+        if self.lat_rows is None or not self.lat_rows.size:
+            return float(deadline)
+        return float(np.minimum(deadline, self.lat_rows.max(axis=1)).mean())
+
+
+class StragglerEstimator:
+    """EW straggler-model estimator over per-step (mask, latency) rows.
+
+    ``alpha`` is the EW update weight (effective memory ~1/alpha steps);
+    ``blocks`` the worker partition used for the correlation score
+    (match the SBM code's ``blocks`` when adapting an SBM family);
+    ``window`` the number of latency rows kept for quantiles.
+    """
+
+    # quantile grid kept in every state snapshot; the controller
+    # interpolates between them for arbitrary (1 - delta) lookups
+    QUANTS = (0.05, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99)
+
+    def __init__(
+        self,
+        n: int,
+        *,
+        alpha: float = 0.1,
+        blocks: int = 4,
+        window: int = 64,
+        err_alpha: Optional[float] = None,
+    ):
+        if n <= 0:
+            raise ValueError(f"need n > 0, got {n}")
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError(f"alpha={alpha} must be in (0, 1]")
+        self.n = n
+        self.alpha = float(alpha)
+        # realized decode errors spike with straggler episodes; smooth
+        # them ~4x slower than the erasure rates so the controller's
+        # calibration tracks the regime, not the episode
+        if err_alpha is not None:
+            self.err_alpha = float(err_alpha)
+        else:
+            self.err_alpha = self.alpha / 4.0
+        self.blocks = max(1, min(int(blocks), n))
+        self.window = max(1, int(window))
+        self._member = block_ids(n, self.blocks)
+        # expected within-block fraction of straggler pairs under
+        # placement-independent erasures (the correlation score's zero)
+        sizes = np.bincount(self._member, minlength=self.blocks)
+        pairs_in = float((sizes * (sizes - 1)).sum())
+        pairs_all = float(n * (n - 1))
+        self._p_exp = pairs_in / pairs_all if pairs_all else 0.0
+        self._steps = 0
+        self._erasure = np.zeros(n)
+        self._corr = 0.0
+        self._corr_steps = 0  # steps with >= 2 stragglers observed
+        self._err = 0.0
+        self._err_steps = 0
+        self._lat_rows: list = []  # ring buffer of [n] latency rows
+
+    # ------------------------------------------------------------------
+
+    def update(
+        self,
+        mask: np.ndarray,
+        latencies: Optional[np.ndarray] = None,
+        decode_err: Optional[float] = None,
+    ) -> None:
+        """Ingest one step: non-straggler mask, optional latency row and
+        optional realized decode error (err / k)."""
+        mask = np.asarray(mask, dtype=bool)
+        if mask.shape != (self.n,):
+            raise ValueError(f"mask shape {mask.shape} != ({self.n},)")
+        a = self.alpha
+        self._steps += 1
+        self._erasure += a * ((~mask).astype(np.float64) - self._erasure)
+        stragglers = np.flatnonzero(~mask)
+        if stragglers.size >= 2 and 0.0 < self._p_exp < 1.0:
+            ids = self._member[stragglers]
+            f = stragglers.size
+            same = (ids[:, None] == ids[None, :]).sum() - f
+            p_obs = same / float(f * (f - 1))
+            score = (p_obs - self._p_exp) / (1.0 - self._p_exp)
+            self._corr_steps += 1
+            self._corr += a * (score - self._corr)
+        if latencies is not None:
+            lat = np.asarray(latencies, dtype=np.float64)
+            if lat.shape != (self.n,):
+                raise ValueError(f"latencies shape {lat.shape} != ({self.n},)")
+            self._lat_rows.append(lat)
+            if len(self._lat_rows) > self.window:
+                self._lat_rows.pop(0)
+        if decode_err is not None:
+            self.update_error(decode_err)
+
+    def update_error(self, decode_err: float) -> None:
+        """Fold one realized decode error (err / k) into the EW mean.
+
+        Separated from :meth:`update` because the batched simulation
+        path decodes masks in chunks and feeds their errors back a few
+        steps after the masks themselves (runner.py's feedback_every).
+        """
+        self._err_steps += 1
+        self._err += self.err_alpha * (float(decode_err) - self._err)
+
+    # ------------------------------------------------------------------
+
+    def _debias(self, value, steps: int):
+        """Adam-style bias correction for the zero-initialized EW mean."""
+        if steps == 0:
+            return value
+        return value / (1.0 - (1.0 - self.alpha) ** steps)
+
+    def state(self) -> EstimatorState:
+        erasure = np.asarray(self._debias(self._erasure, self._steps))
+        quants: Dict[float, float] = {}
+        if self._lat_rows:
+            flat = np.concatenate(self._lat_rows)
+            for q in self.QUANTS:
+                quants[q] = float(np.quantile(flat, q))
+        err_ew = None
+        if self._err_steps:
+            err_ew = self._err / (1.0 - (1.0 - self.err_alpha) ** self._err_steps)
+        mean_erasure = float(erasure.mean()) if self._steps else 0.0
+        lat_rows = np.asarray(self._lat_rows) if self._lat_rows else None
+        return EstimatorState(
+            steps=self._steps,
+            erasure=erasure,
+            mean_erasure=mean_erasure,
+            block_corr=float(self._debias(self._corr, self._corr_steps)),
+            err_ew=err_ew,
+            quantiles=quants,
+            lat_rows=lat_rows,
+        )

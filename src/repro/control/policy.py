@@ -1,0 +1,339 @@
+"""Redundancy controller: estimator state + error budget -> actions.
+
+The decision half of the AdaptiveCoder loop (docs/adaptive.md).  The
+controller's objective is the E11 frontier's own scalar — modelled
+time-to-target, ``E[step time] * s / (1 - err)`` — minimized subject to
+the user *error budget* (mean decode err / k, the 1/(1-e)
+convergence-penalty currency of ``sim.frontier``).  Every decision
+epoch it enumerates candidate operating points
+
+    (s in the registry's legal_s ladder)
+  x (decoder in the family's declared onestep/optimal)
+  x (deadline on the observed latency-quantile grid)
+
+prices each with the calibrated error band and the estimator's
+window-based what-if lookups (``erasure_at`` / ``step_time_at``), and
+moves ONE coordinate toward the argmin per action.  Three action kinds
+come out:
+
+  * ``set_deadline`` — the PR-2 adaptive-deadline controller wrapped as
+    an action: the deadline component of the argmin, ignored inside a
+    relative ``deadline_deadband``.
+  * ``set_decoder`` — onestep <-> optimal (least-squares never has
+    larger error than one-step on the same mask, so a blown budget
+    escalates decoder first: it costs no extra worker compute).
+  * ``set_s`` — raise/lower replication one rung of the legal-s ladder
+    (the elastic-rebuild path of ``GradientCode.with_workers`` /
+    ``CodedTrainConfig.code_params`` keeps family variants intact).
+    Worker compute scales ~ s, so the objective charges candidates
+    linearly in s.
+
+Hysteresis, so the controller cannot thrash: re-code actions respect a
+``cooldown`` (min steps between them), a candidate must beat the
+current point by ``improve_margin`` before any move happens, deadline
+moves inside the deadband are ignored, running over budget is a soft
+constraint (quadratic overspend penalty on the live point, so a
+marginal breach nudges rather than flips), and block-correlated
+erasures (the estimator's ``block_corr`` score) inflate candidate
+error predictions — an alternating trace whose EW-smoothed estimates
+sit inside the margins produces no actions at all.
+
+The prediction model is the paper's closed forms
+(:mod:`repro.core.theory`) plus the uncovered-task estimate for
+least-squares decoding, with an online per-decoder multiplicative
+calibration: ``predict = c[decoder] * band(k, s, delta, decoder)``
+where ``c`` tracks realized-vs-band on the live operating point, so a
+loose bound still ranks candidate configs correctly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core import theory
+from ..core.registry import CodeFamily
+from .estimator import EstimatorState
+
+__all__ = ["Action", "ControlConfig", "AdaptivePolicy", "error_band"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    """One controller decision; ``value`` is the new s / decoder name /
+    deadline seconds depending on ``kind``."""
+
+    kind: str  # "set_s" | "set_decoder" | "set_deadline"
+    value: object
+    reason: str = ""
+
+    KINDS = ("set_s", "set_decoder", "set_deadline")
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise ValueError(f"action kind {self.kind!r} not in {self.KINDS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlConfig:
+    """User surface of the AdaptiveCoder (docs/adaptive.md)."""
+
+    error_budget: float = 0.05  # mean decode err / k to steer under
+    improve_margin: float = 0.05  # min predicted ttt gain before moving
+    cooldown: int = 25  # min steps between re-code actions
+    warmup: int = 10  # observations before the first action
+    deadline_every: int = 5  # min steps between deadline actions
+    deadline_deadband: float = 0.1  # ignore < 10% relative deadline moves
+    s_min: Optional[int] = None  # clamp on the legal_s search range
+    s_max: Optional[int] = None
+    ew_alpha: float = 0.1  # estimator memory (threaded by runner)
+
+    def __post_init__(self):
+        if self.error_budget <= 0:
+            raise ValueError(f"error_budget={self.error_budget} must be > 0")
+        if not (0.0 < self.improve_margin < 1.0):
+            raise ValueError(
+                f"improve_margin={self.improve_margin} must be in (0, 1)"
+            )
+
+
+def error_band(family: str, k: int, s: int, delta: float, decoder: str) -> float:
+    """Predicted mean decode error / k at straggler fraction ``delta``.
+
+    One-step decoding uses the paper's closed forms: Theorem 5 (exact
+    finite-k version) for FRC, the exact Bernoulli E[err_1] for the
+    random families.  Optimal decoding has no closed form outside FRC
+    (Theorem 6), so the random families use the *uncovered-task*
+    estimate — a task whose every replica straggles contributes ~1 to
+    the least-squares error, and in the small-error regime uncovered
+    tasks dominate it:
+
+      * Bernoulli support (bgc / rbgc / sbm):
+        P(task uncovered) = (1 - (1-delta) * s/k)^n;
+      * (near-)regular row degree ns/k (expander / sregular / cyclic):
+        P(task uncovered) ~= delta^(ns/k).
+
+    Returns error already divided by k.  The policy multiplies this by
+    an online calibration factor, so systematic looseness cancels; the
+    band only has to *rank* candidate (s, decoder) pairs correctly.
+    """
+    delta = float(min(max(delta, 0.0), 0.95))
+    r = max(int(round((1.0 - delta) * k)), 0)
+    if r == 0:
+        return 1.0
+    if family == "uncoded":
+        return delta
+    if family == "frc" and k % s == 0:
+        if decoder == "optimal":
+            return theory.thm6_expected_err_frc(k, s, r) / k
+        return max(theory.thm5_expected_err1_frc_exact(k, s, r), 0.0) / k
+    if decoder == "optimal":
+        if family in ("expander", "sregular", "cyclic"):
+            row_deg = max(int(round(s)), 1)  # n = k row degree ~= s
+            return float(delta**row_deg)
+        # the stack runs square codes (k == n workers), so k is the
+        # exponent's worker count
+        return float((1.0 - (1.0 - delta) * s / k) ** k)
+    return max(theory.expected_err1_bgc_exact(k, s, r), 0.0) / k
+
+
+class AdaptivePolicy:
+    """Maps estimator snapshots to actions for one live (family, k, n).
+
+    Tracks the current operating point ``(s, decoder, deadline)`` — the
+    caller confirms application implicitly: a returned action is assumed
+    applied (the runner/trainer always applies it), which is what makes
+    fused and distributed trainers fed identical observations take
+    identical action sequences.
+    """
+
+    # calibration clip: wide because the uncovered-task band is a
+    # small-error estimate the realized least-squares error can exceed
+    # by orders of magnitude in the mid-delta regime
+    CALIB_LO, CALIB_HI = 0.05, 1e3
+
+    # candidate admission uses a safety factor under the budget while
+    # the live point is only invalidated ABOVE the budget — the
+    # hysteresis band that keeps spiky realized errors from flip-
+    # flopping the operating point
+    SAFETY = 0.8
+
+    def __init__(
+        self,
+        family: CodeFamily,
+        k: int,
+        n: int,
+        cfg: ControlConfig,
+        *,
+        s: int,
+        decoder: str = "onestep",
+        deadline: float = 1.5,
+    ):
+        self.family = family
+        self.k, self.n = int(k), int(n)
+        self.cfg = cfg
+        self.s = int(s)
+        self.decoder = decoder
+        self.deadline = float(deadline)
+        lo = cfg.s_min if cfg.s_min is not None else 1
+        hi = cfg.s_max if cfg.s_max is not None else min(k, 4 * self.s)
+        self._ladder: Tuple[int, ...] = family.legal_s(k, n, lo=lo, hi=hi)
+        if self.s not in self._ladder:
+            self._ladder = tuple(sorted(set(self._ladder) | {self.s}))
+        decoders = [
+            d for d in ("onestep", "optimal") if family.supports_decoder(d)
+        ]
+        self._decoders = tuple(decoders) or (decoder,)
+        self._last_recode = -(10**9)
+        self._last_deadline = -(10**9)
+        # per-decoder realized-vs-band calibration (see module doc)
+        self._calib = {d: 1.0 for d in self._decoders}
+        self._calib.setdefault(decoder, 1.0)
+        self.actions: list = []  # applied-action log of (step, Action)
+
+    # ------------------------------------------------------------------
+    # prediction model
+    # ------------------------------------------------------------------
+
+    def _band(self, s: int, delta: float, dec: str, guard: float = 1.0) -> float:
+        c = self._calib.get(dec, 1.0)
+        return guard * c * error_band(self.family.name, self.k, s, delta, dec)
+
+    def _calibrate(self, est: EstimatorState) -> None:
+        """Track realized / band on the live operating point."""
+        if est.err_ew is None:
+            return
+        band = error_band(
+            self.family.name, self.k, self.s, est.mean_erasure, self.decoder
+        )
+        if band > 1e-12:
+            ratio = est.err_ew / band
+            self._calib[self.decoder] = float(
+                np.clip(ratio, self.CALIB_LO, self.CALIB_HI)
+            )
+
+    def _candidates(self, est: EstimatorState):
+        """(ttt, s, decoder, deadline) over the ladder x decoders x the
+        observed latency-quantile grid; onestep enumerated first so
+        exact ties prefer the cheaper decoder."""
+        if est.lat_rows is not None:
+            quantile_grid = (0.5, 0.75, 0.9, 0.95, 0.99)
+            grid = sorted(
+                {round(est.latency_quantile(q), 12) for q in quantile_grid}
+                | {self.deadline}
+            )
+        else:
+            grid = [self.deadline]
+        corr = float(min(max(est.block_corr, 0.0), 1.0))
+        guard = 1.0 + corr
+        budget = self.SAFETY * self.cfg.error_budget
+        out = []
+        for dec in self._decoders:
+            for d in grid:
+                delta = est.erasure_at(d)
+                b_now = self._band(self.s, delta, dec, guard)
+                for s in self._ladder:
+                    e = self._band(s, delta, dec, guard)
+                    if s > self.s and corr > 0.0 and e > 0.0 and b_now > 0.0:
+                        # block-correlated erasures kill a task's
+                        # same-block replicas together, so raising s
+                        # buys less than the independence band claims:
+                        # flatten the promised gain by the observed
+                        # correlation (one-sided — s-down keeps the
+                        # full pessimistic sensitivity)
+                        e = e ** (1.0 - corr) * b_now**corr
+                    if e > budget:
+                        continue
+                    ttt = est.step_time_at(d) * s / (1.0 - min(e, 0.99))
+                    out.append((ttt, s, dec, d))
+        return out
+
+    def _step_s(self, direction: int) -> Optional[int]:
+        """Next rung of the legal-s ladder above (+1) / below (-1)."""
+        if direction > 0:
+            ups = [x for x in self._ladder if x > self.s]
+            return min(ups) if ups else None
+        downs = [x for x in self._ladder if x < self.s]
+        return max(downs) if downs else None
+
+    # ------------------------------------------------------------------
+    # the decision rule
+    # ------------------------------------------------------------------
+
+    def decide(self, step: int, est: EstimatorState) -> Optional[Action]:
+        """One decision per call; a returned action is considered
+        applied (updates the tracked operating point + cooldowns)."""
+        cfg = self.cfg
+        if est.steps < cfg.warmup:
+            return None
+        self._calibrate(est)
+        delta = est.erasure_at(self.deadline)
+        if est.err_ew is not None:
+            err_now = est.err_ew
+        else:
+            err_now = self._band(self.s, delta, self.decoder)
+        over = err_now > cfg.error_budget
+
+        cands = self._candidates(est)
+        if not cands:
+            # nothing predicted-safe anywhere on the grid: escalate
+            # redundancy as the last resort (decoder first — free)
+            if over and step - self._last_recode >= cfg.cooldown:
+                if self.decoder != "optimal" and "optimal" in self._decoders:
+                    reason = (
+                        f"err {err_now:.4f} > budget; no safe candidate, "
+                        f"escalating decoder"
+                    )
+                    action = Action("set_decoder", "optimal", reason)
+                    return self._apply(step, action)
+                s_up = self._step_s(+1)
+                if s_up is not None:
+                    reason = (
+                        f"err {err_now:.4f} > budget; no safe candidate, "
+                        f"escalating s"
+                    )
+                    return self._apply(step, Action("set_s", s_up, reason))
+            return None
+        best = min(cands)
+        # the live point, priced with its REALIZED error; running over
+        # budget is a soft constraint — quadratic overspend penalty, so
+        # a marginal breach doesn't thrash but a real one forces a move
+        err_clip = min(err_now, 0.99)
+        ttt_now = est.step_time_at(self.deadline) * self.s / (1.0 - err_clip)
+        if over:
+            ttt_now *= (err_now / cfg.error_budget) ** 2
+        if best[0] >= (1.0 - cfg.improve_margin) * ttt_now:
+            return None  # not enough predicted gain: hold still
+        _, s_c, dec_c, d_c = best
+        d_move = abs(d_c / max(self.deadline, 1e-9) - 1.0)
+        if d_move > cfg.deadline_deadband:
+            if step - self._last_deadline >= cfg.deadline_every:
+                reason = f"quantile argmin (delta~{est.erasure_at(d_c):.3f})"
+                action = Action("set_deadline", float(d_c), reason)
+                return self._apply(step, action)
+        if step - self._last_recode < cfg.cooldown:
+            return None
+        if dec_c != self.decoder:
+            action = Action("set_decoder", dec_c, "ttt argmin decoder")
+            return self._apply(step, action)
+        if s_c != self.s:
+            rung = self._step_s(+1 if s_c > self.s else -1)
+            if rung is not None:
+                reason = f"toward ttt argmin s={s_c}"
+                return self._apply(step, Action("set_s", rung, reason))
+        return None
+
+    def _apply(self, step: int, action: Action) -> Action:
+        if action.kind == "set_s":
+            self.s = int(action.value)
+            self._last_recode = step
+        elif action.kind == "set_decoder":
+            self.decoder = str(action.value)
+            self._last_recode = step
+        else:
+            self.deadline = float(action.value)
+            self._last_deadline = step
+        self.actions.append((step, action))
+        return action

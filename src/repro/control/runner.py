@@ -1,0 +1,337 @@
+"""AdaptiveCoder: the closed loop, wired into training and simulation.
+
+Two consumers share the estimator + policy pair:
+
+  * :class:`AdaptiveCoder` — the controller object
+    ``training.train_loop.CodedTrainer`` accepts as ``controller=``.
+    The trainer feeds it one ``observe(step, mask, latencies,
+    decode_err)`` per step and asks ``decide(step)`` at the top of the
+    next one; a returned re-code action makes the trainer rebuild code,
+    assignment, pipeline, engine AND step_fn through the same path the
+    elastic-fault machinery uses (so ``dist_mode="coded_allreduce"``
+    partitions can never go stale).  The controller is a pure function
+    of its observations, so fused and distributed trainers fed the same
+    masks take identical action sequences — the basis of the fp64
+    re-code parity test in tests/test_coded_allreduce.py.
+  * :func:`run_adaptive_sim` — the ClusterSim-shaped co-simulation with
+    the controller in the loop, contributing the ``adaptive_coder``
+    policy column to the E11 frontier
+    (:func:`repro.sim.frontier.sweep_adaptive`).  Decoding stays
+    batched: masks accumulate and are decoded in control-interval
+    chunks (every ``feedback_every`` steps and at re-code boundaries),
+    each chunk ONE ``DecodeEngine.decode_batch`` call whose realized
+    errors feed the estimator's calibration — ~S/feedback_every batched
+    calls per run, never a per-step decode loop.
+
+Compute model: a worker computing s coded tasks spends ~s/s_ref of the
+reference step time (the trace is calibrated at ``s_ref``), so lowering
+s is a real wall-clock win and raising it a real cost — without this
+the controller would trivially max out redundancy.  Scaling is uniform
+across workers, so the straggler SET is scale-invariant: masks and the
+deadline live in reference-trace units and only the realized step time
+is multiplied by s/s_ref.  Static frontier cells all run at s_ref
+(scale 1), which keeps the comparison fair.
+
+``ScriptedController`` drives the same trainer hooks from an explicit
+{step: Action} plan — the deterministic re-code injector the
+differential tests use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core import registry
+from ..core.engine import DecodeEngine
+from .estimator import StragglerEstimator
+from .policy import Action, AdaptivePolicy, ControlConfig
+
+__all__ = [
+    "AdaptiveCoder",
+    "ScriptedController",
+    "AdaptiveRunResult",
+    "run_adaptive_sim",
+    "adaptive_frontier_point",
+]
+
+
+class AdaptiveCoder:
+    """Estimator + policy bundle implementing the trainer's controller
+    protocol (``observe`` / ``decide``).
+
+    ``blocks`` defaults to the sbm family default (4) — pass the code's
+    actual block count when adapting an SBM variant so the correlation
+    score aligns with the real clusters.
+    """
+
+    def __init__(
+        self,
+        family: str,
+        n: int,
+        cfg: Optional[ControlConfig] = None,
+        *,
+        s: int,
+        decoder: str = "onestep",
+        deadline: float = 1.5,
+        blocks: int = 4,
+    ):
+        self.cfg = cfg if cfg is not None else ControlConfig()
+        self.family = registry.get(family)
+        self.family.require_decoder(decoder)
+        self.n = int(n)
+        self.blocks = blocks
+        self.estimator = StragglerEstimator(
+            self.n, alpha=self.cfg.ew_alpha, blocks=blocks
+        )
+        self.policy = AdaptivePolicy(
+            self.family,
+            self.n,
+            self.n,
+            self.cfg,
+            s=s,
+            decoder=decoder,
+            deadline=deadline,
+        )
+
+    # -- current operating point (what the policy believes is applied) --
+
+    @property
+    def s(self) -> int:
+        return self.policy.s
+
+    @property
+    def decoder(self) -> str:
+        return self.policy.decoder
+
+    @property
+    def deadline(self) -> float:
+        return self.policy.deadline
+
+    @property
+    def recodes(self) -> int:
+        recode_kinds = ("set_s", "set_decoder")
+        return sum(1 for _, a in self.policy.actions if a.kind in recode_kinds)
+
+    def _resize(self, n: int) -> None:
+        """Elastic shrink: rebuild the estimator/ladder for n' workers
+        (erasure history restarts — the fleet changed under us)."""
+        self.n = n
+        self.estimator = StragglerEstimator(
+            n, alpha=self.cfg.ew_alpha, blocks=self.blocks
+        )
+        self.policy = AdaptivePolicy(
+            self.family,
+            n,
+            n,
+            self.cfg,
+            s=min(self.policy.s, n),
+            decoder=self.policy.decoder,
+            deadline=self.policy.deadline,
+        )
+
+    # -------------------- the trainer protocol --------------------
+
+    def observe(
+        self,
+        step: int,
+        mask: np.ndarray,
+        latencies: Optional[np.ndarray] = None,
+        decode_err: Optional[float] = None,
+    ) -> None:
+        del step
+        mask = np.asarray(mask, dtype=bool)
+        if mask.shape[0] != self.n:
+            self._resize(mask.shape[0])
+        self.estimator.update(mask, latencies=latencies, decode_err=decode_err)
+
+    def decide(self, step: int) -> Optional[Action]:
+        return self.policy.decide(step, self.estimator.state())
+
+    def feed_errors(self, errors) -> None:
+        """Fold a chunk of realized decode errors (err / k each) into
+        the estimator — the batched-decode feedback path."""
+        for e in np.asarray(errors, dtype=np.float64).ravel():
+            self.estimator.update_error(float(e))
+
+
+class ScriptedController:
+    """Deterministic {step: Action} plan with the AdaptiveCoder
+    protocol — the tests' re-code injector (e.g. force ``set_s`` at a
+    known step and prove fused == dist metric parity across it)."""
+
+    def __init__(self, plan: Dict[int, Action]):
+        self.plan = dict(plan)
+        self.actions: list = []
+
+    def observe(self, step: int, mask, latencies=None, decode_err=None) -> None:
+        pass
+
+    def decide(self, step: int) -> Optional[Action]:
+        action = self.plan.get(step)
+        if action is not None:
+            self.actions.append((step, action))
+        return action
+
+
+# --------------------------------------------------------------------------
+# the co-simulation with the controller in the loop
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AdaptiveRunResult:
+    """ClusterRunResult-shaped summary plus the control trajectory."""
+
+    scheme: str
+    step_times: np.ndarray  # [S] modelled seconds (s-scaled)
+    masks: np.ndarray  # [S, n]
+    errors: np.ndarray  # [S] decode err / k
+    s_traj: np.ndarray  # [S] replication factor per step
+    deadlines: np.ndarray  # [S]
+    decoder_traj: list  # [S] decoder names
+    recodes: int  # segment boundaries crossed
+    batch_calls: int  # ~ S/feedback_every + recodes
+    policy: str = "adaptive_coder"
+    decoder: str = "auto"
+
+    @property
+    def total_time(self) -> float:
+        return float(self.step_times.sum())
+
+    @property
+    def mean_step_time(self) -> float:
+        return float(self.step_times.mean())
+
+    @property
+    def mean_error(self) -> float:
+        return float(self.errors.mean())
+
+    @property
+    def mean_stragglers(self) -> float:
+        return float((~self.masks).sum(axis=1).mean())
+
+
+def run_adaptive_sim(
+    scheme: str,
+    trace,
+    cfg: Optional[ControlConfig] = None,
+    *,
+    s: int,
+    s_ref: Optional[int] = None,
+    decoder: str = "onestep",
+    deadline: float = 1.5,
+    seed: int = 0,
+    backend: str = "numpy",
+    blocks: int = 4,
+    feedback_every: int = 10,
+) -> AdaptiveRunResult:
+    """Run the AdaptiveCoder over a LatencyTrace.
+
+    Decoding is batched in control-interval chunks: accumulated masks
+    are decoded every ``feedback_every`` steps (and at every re-code
+    boundary) in one ``decode_batch`` call each, and the realized
+    errors are fed back to the estimator so the policy's calibration
+    engages — ~S / feedback_every batched calls per run, never a
+    per-step decode.  ``s_ref`` is the replication the trace's
+    latencies are calibrated at (defaults to the starting ``s``); step
+    times scale by the live s / s_ref.
+    """
+    cfg = cfg if cfg is not None else ControlConfig()
+    n = trace.n
+    s_ref = s if s_ref is None else s_ref
+    rng = np.random.default_rng(seed)
+    fam = registry.get(scheme)
+    coder = AdaptiveCoder(
+        scheme, n, cfg, s=s, decoder=decoder, deadline=deadline, blocks=blocks
+    )
+    code = fam.make(k=n, n=n, s=s, rng=rng)
+    engine = DecodeEngine(code, backend=backend, s=s)
+
+    S = trace.steps
+    masks = np.empty((S, n), dtype=bool)
+    times = np.empty(S)
+    errors = np.empty(S)
+    s_traj = np.empty(S, dtype=np.int64)
+    deadlines = np.empty(S)
+    decoder_traj: list = []
+    done = 0  # masks[:done] decoded + fed back
+    recodes = 0
+    batch_calls = 0
+    decoder_now = decoder
+
+    def flush(stop: int) -> None:
+        nonlocal done, batch_calls
+        if stop > done:
+            errs = engine.errors_batch(masks[done:stop], decoder_now)
+            errors[done:stop] = errs / code.k
+            coder.feed_errors(errors[done:stop])
+            done = stop
+            batch_calls += 1
+
+    for t in range(S):
+        if t - done >= feedback_every:
+            flush(t)
+        action = coder.decide(t)
+        if action is not None and action.kind in ("set_s", "set_decoder"):
+            flush(t)
+            recodes += 1
+            if action.kind == "set_s":
+                code = fam.make(k=n, n=n, s=coder.s, rng=rng)
+                engine = DecodeEngine(code, backend=backend, s=coder.s)
+            decoder_now = coder.decoder
+        lat = trace.latencies[t]  # reference-trace units
+        d = coder.deadline
+        scale = coder.s / s_ref  # uniform compute scaling
+        masks[t] = lat <= d
+        times[t] = min(d, float(lat.max())) * scale
+        s_traj[t] = coder.s
+        deadlines[t] = d
+        decoder_traj.append(decoder_now)
+        coder.observe(t, masks[t], latencies=lat)
+    flush(S)
+
+    return AdaptiveRunResult(
+        scheme=scheme,
+        step_times=times,
+        masks=masks,
+        errors=errors,
+        s_traj=s_traj,
+        deadlines=deadlines,
+        decoder_traj=decoder_traj,
+        recodes=recodes,
+        batch_calls=batch_calls,
+    )
+
+
+def adaptive_frontier_point(
+    scheme: str,
+    trace,
+    *,
+    s: int,
+    error_budget: float = 0.05,
+    cfg: Optional[ControlConfig] = None,
+    seed: int = 0,
+    max_inflation: float = 100.0,
+):
+    """One E11 frontier point for the adaptive policy (lazy frontier
+    import keeps sim.frontier free of a control dependency cycle)."""
+    from ..sim.frontier import FrontierPoint, time_to_target_error
+
+    if cfg is None:
+        cfg = ControlConfig(error_budget=error_budget)
+    res = run_adaptive_sim(scheme, trace, cfg, s=s, seed=seed)
+    return FrontierPoint(
+        scheme=scheme,
+        policy=res.policy,
+        decoder=res.decoder,
+        total_time=res.total_time,
+        mean_step_time=res.mean_step_time,
+        mean_error=res.mean_error,
+        mean_stragglers=res.mean_stragglers,
+        # AdaptiveRunResult exposes the same total_time/mean_error
+        # surface, so the CANONICAL inflation clip applies verbatim
+        time_to_target=time_to_target_error(res, max_inflation),
+    )

@@ -1,9 +1,12 @@
 """Approximate gradient coding via sparse random graphs — core library.
 
-Implements the paper's contribution: gradient-code constructions
-(FRC / BGC / rBGC / s-regular / cyclic), decoders (one-step / optimal /
-algorithmic), adversarial straggler analysis, closed-form theory, and the
-Monte-Carlo simulation engine, plus the assignment layer that couples a
+Implements the paper's contribution and its follow-ups: gradient-code
+constructions (frc / bgc / rbgc / sregular / sbm / expander / cyclic /
+uncoded), decoders (one-step / optimal incl. masked-Gram / algorithmic),
+adversarial straggler analysis, closed-form theory, the batched
+DecodeEngine (mask ensembles -> weights/errors, docs/architecture.md
+§5), the declarative scheme registry (docs/families.md), the
+Monte-Carlo simulation engine, and the assignment layer that couples a
 code to a physical data-parallel batch.
 """
 

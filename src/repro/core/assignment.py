@@ -16,7 +16,7 @@ For decode weights w (from repro.core.decoding), the per-slot loss weight
 makes  sum_{j,t,rows} weight * loss_row  ==  (decoded approximation of)
 the mean loss over the k*T unique examples.  This identity — decode as
 loss reweighting — is what lets the whole scheme run inside a vanilla
-data-parallel all-reduce (DESIGN.md Sec. 2.1).
+data-parallel all-reduce (docs/architecture.md §2.1).
 """
 
 from __future__ import annotations

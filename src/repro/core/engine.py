@@ -26,7 +26,7 @@ Python loop over trials:
     cache, so regimes that repeat masks (adversarial stragglers, stable
     deadline cohorts) decode once per distinct mask.
 
-See DESIGN.md §5 for how this slots between core.decoding (scalar
+See docs/architecture.md §5 for how this slots between core.decoding (scalar
 oracles), core.simulate (mask ensembles) and training.train_loop
 (per-step decode).
 """
@@ -204,7 +204,7 @@ class DecodeEngine:
         return BatchDecode(weights=W, errors=errs)
 
     def _gram_weights(self, masks: np.ndarray) -> np.ndarray:
-        """Masked-Gram normal-equations least squares (DESIGN.md §10).
+        """Masked-Gram normal-equations least squares (docs/families.md).
 
         The [B, n, n] Gram ensemble comes from the batched Pallas kernel
         on kernel backends and from numpy on the numpy backend; for 0/1

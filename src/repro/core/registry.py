@@ -25,7 +25,7 @@ and every consumer resolves through :func:`get` / :func:`names` /
   * ``launch.train`` derives its CLI choices from ``names()``;
   * the benchmarks sweep ``families()`` filtered by capability.
 
-See DESIGN.md §10 for the contract and the one-file recipe for adding
+See docs/families.md for the contract and the one-file recipe for adding
 a family.
 """
 
@@ -167,7 +167,7 @@ def get(name: str) -> CodeFamily:
             f"unknown code family {name!r}; registered families: "
             f"{sorted(_REGISTRY)}. Add one with "
             f"repro.core.registry.register(CodeFamily(name={name!r}, "
-            f"constructor=...)) — see DESIGN.md §10.")
+            f"constructor=...)) — see docs/families.md.")
     return fam
 
 

@@ -1,3 +1,12 @@
-"""Coded data pipeline."""
+"""Coded data pipeline.
+
+Public surface: ``PipelineConfig`` and ``CodedDataPipeline`` — maps a
+``CodedAssignment`` to physical batches: ``batch_for_step`` stamps the
+per-row loss weights w_j G[i,j] / (kT) of the decode-as-loss-
+reweighting identity (docs/architecture.md 2.1), ``uncoded_batch_for_
+step`` is the plain-DP reference, and ``device_batch_for_step`` lays
+rows out per device lane for dist_mode="coded_allreduce" (padding
+lanes zeroed and masked out of the CE).
+"""
 
 from .pipeline import CodedDataPipeline, PipelineConfig  # noqa: F401

@@ -1,10 +1,16 @@
-"""Distribution layer: logical-axis sharding rules, mesh context, and
-activation constraints.
+"""Distribution layer: sharding rules, mesh context, coded all-reduce.
 
-Everything the models / optimizer / launchers need to be mesh-agnostic:
-parameters and activations name *logical* axes ("vocab", "mlp", "batch",
-...) and `repro.dist.sharding` resolves them against the active mesh and
-rule set, with divisibility-checked fallbacks.
+Two public surfaces:
+
+* `repro.dist.sharding` — everything the models / optimizer / launchers
+  need to be mesh-agnostic: parameters and activations name *logical*
+  axes ("vocab", "mlp", "batch", ...) resolved against the active mesh
+  and rule set with divisibility-checked fallbacks (use_mesh /
+  use_rules / constrain / param_shardings ...).
+* `repro.dist.coded_allreduce` — the paper's Algorithm 1/2 on real
+  devices: CodedAllReduce pins the n code columns to device lanes
+  (partition_workers / DevicePartition) and decodes as a weighted psum
+  over the 1-D worker mesh (docs/architecture.md §9).
 """
 
 from .sharding import (  # noqa: F401

@@ -1,4 +1,4 @@
-"""CodedAllReduce: shard_map coded gradient aggregation (DESIGN.md §9).
+"""CodedAllReduce: shard_map coded gradient aggregation (docs/architecture.md §9).
 
 After PR 1-2 the coded path still executed as a single-process
 simulation — decode weights were folded into per-row loss weights and
@@ -24,8 +24,9 @@ Two aggregation surfaces:
 
   * :meth:`CodedAllReduce.value_and_grad` — the training path.  Wraps a
     loss function in shard_map: every device differentiates only its
-    local rows (the decode-as-loss-reweighting identity of DESIGN.md
-    §2.1 restricted to the device's workers) and the psum of the local
+    local rows (the decode-as-loss-reweighting identity of
+    docs/architecture.md §2.1 restricted to the device's workers) and
+    the psum of the local
     gradients IS the master decode.  Differentially tested against
     ``training.train_loop.explicit_master_decode_grads`` to fp64 in
     tests/test_coded_allreduce.py.

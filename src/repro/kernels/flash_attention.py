@@ -1,6 +1,6 @@
 """Flash attention Pallas TPU kernel (online softmax, blocked VMEM tiling).
 
-Design for the TPU memory hierarchy (DESIGN.md Sec. 5):
+Design for the TPU memory hierarchy (docs/architecture.md §5):
   * grid = (B, H, Sq/bq, Sk/bk); the last dim is sequential ("arbitrary")
     so the fp32 running max / denominator / accumulator for one q-block
     live in VMEM scratch across kv-block iterations;

@@ -4,7 +4,7 @@ data-dependent per-channel decay.
     S_t = diag(w_t) S_{t-1} + k_t^T v_t
     o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
 
-TPU adaptation (DESIGN.md Sec. 5): the sequential recurrence is
+TPU adaptation (docs/architecture.md §5): the sequential recurrence is
 re-factored into per-chunk dense algebra so the MXU does all heavy work —
 intra-chunk interactions become a decay-weighted lower-triangular
 [c, c] @ [c, dh] matmul pair, and the [dh, dh] state is carried across

@@ -1,0 +1,9 @@
+"""Launchers and validation harnesses (CLI entry points).
+
+Public surface, all `python -m repro.launch.<name>`: ``train`` (the
+CodedTrainer CLI: --code/--decoder/--dist-mode/--trace/--adaptive),
+``serve`` (hedged continuous-batching demo), ``dryrun`` (compile-only
+512-device validation + roofline extraction, docs/architecture.md §6),
+``roofline`` / ``perf`` (analysis helpers) and ``mesh`` (debug host
+meshes).  Importable as a package for the pieces the benchmarks reuse.
+"""

@@ -26,7 +26,7 @@ and records, per cell:
   * collective bytes parsed from the post-SPMD HLO text,
   * reduced-depth UNROLLED variants (1 and 2 pattern groups, single-pod)
     whose per-layer slope extrapolates scan-hidden terms to full depth
-    (XLA counts a `while` body once — DESIGN.md Sec. 6).
+    (XLA counts a `while` body once — docs/architecture.md §6).
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch minicpm-2b \

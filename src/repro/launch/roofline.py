@@ -9,7 +9,7 @@ Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
 `compiled.cost_analysis()` / `lowered/compiled.as_text()` describe the
 per-device SPMD module, so no extra division by chip count is needed.
 
-Two structural corrections documented in DESIGN.md Sec. 6:
+Two structural corrections documented in docs/architecture.md §6:
  * XLA counts a scan (`while`) body ONCE -> we lower small *unrolled*
    depth variants (L = p and 2p pattern groups) and extrapolate the
    per-layer slope to the full depth;

@@ -59,13 +59,21 @@ def main(argv=None) -> int:
                     choices=["fused", "coded_allreduce"],
                     help="'coded_allreduce' runs the shard_map coded "
                          "aggregation over a 1-D worker mesh spanning all "
-                         "local devices (DESIGN.md §9)")
+                         "local devices (docs/architecture.md §9)")
     ap.add_argument("--trace", default="none",
                     choices=["none", "pareto", "bimodal", "clustered"],
                     help="drive straggler masks from a latency trace "
                          "through --sync-policy instead of --straggler")
     ap.add_argument("--sync-policy", default="deadline",
                     choices=["sync", "deadline", "backup", "adaptive"])
+    ap.add_argument("--adaptive", action="store_true",
+                    help="close the loop: an AdaptiveCoder controller "
+                         "(repro.control) observes the straggler process "
+                         "and re-tunes s / decoder / deadline online "
+                         "(docs/adaptive.md)")
+    ap.add_argument("--error-budget", type=float, default=0.05,
+                    help="mean decode err/k the adaptive controller "
+                         "steers under (with --adaptive)")
     ap.add_argument("--mesh", default="none", choices=["none", "debug"],
                     help="'debug' builds a small host mesh (needs "
                          "XLA_FLAGS=--xla_force_host_platform_device_count)")
@@ -102,6 +110,16 @@ def main(argv=None) -> int:
         faults = FaultInjector([FaultPlan(step=args.fail_step,
                                           workers=(args.workers - 1,))])
 
+    controller = None
+    if args.adaptive:
+        from repro.control import AdaptiveCoder, ControlConfig
+        controller = AdaptiveCoder(
+            args.code, args.workers,
+            ControlConfig(error_budget=args.error_budget),
+            s=args.s, decoder=args.decoder)
+        print(f"[train] adaptive controller: error budget "
+              f"{args.error_budget}")
+
     tcfg = CodedTrainConfig(
         code=args.code, n_workers=args.workers, s=args.s,
         decoder=args.decoder, seq_len=args.seq_len, steps=args.steps,
@@ -113,7 +131,8 @@ def main(argv=None) -> int:
     trainer = CodedTrainer(model, tcfg, straggler_model=straggler,
                            fault_injector=faults, mesh=mesh,
                            trace=trace,
-                           sync_policy=args.sync_policy if trace else None)
+                           sync_policy=args.sync_policy if trace else None,
+                           controller=controller)
     if trainer.allreduce is not None:
         print(f"[train] coded_allreduce: {trainer.allreduce.n_devices} "
               f"device(s) x {trainer.allreduce.partition.lanes} lane(s)")
@@ -122,7 +141,13 @@ def main(argv=None) -> int:
     for h in out["history"]:
         print(f"  step {h['step']:>5} ce={h['mean_ce']:.4f} "
               f"stragglers={h['stragglers']} "
-              f"decode_err/k={h['decode_err']:.4f} workers={h['n_workers']}")
+              f"decode_err/k={h['decode_err']:.4f} workers={h['n_workers']}"
+              + (f" s={h['s']} dec={h['decoder']}" if args.adaptive else ""))
+    if controller is not None and controller.policy.actions:
+        print("[train] controller actions:")
+        for at_step, act in controller.policy.actions:
+            print(f"  step {at_step:>5} {act.kind} -> {act.value}  "
+                  f"({act.reason})")
     if args.history_out:
         with open(args.history_out, "w") as f:
             json.dump(out["history"], f, indent=1)

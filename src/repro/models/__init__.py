@@ -1,4 +1,14 @@
-"""Pure-JAX model stack for the assigned architecture pool."""
+"""Pure-JAX model stack for the assigned architecture pool.
+
+Public surface: ``build_model(cfg) -> Model`` (init / loss_fn /
+param_count over the arch pool: dense + MoE transformers, rglru /
+rwkv6 recurrent blocks, enc-dec), the ``ArchConfig`` / ``MoEConfig``
+config records with ``reduce_for_smoke``, and the ``SHAPES`` table
+(``ShapeCell``) the dry-run harness sweeps.  Models name logical axes
+so ``repro.dist`` can shard them on any mesh, cast inputs at the
+device boundary (fp64-clean for the differential suites), and carry
+``loss_weight`` per row — the hook the coded pipeline stamps.
+"""
 
 from .config import ArchConfig, MoEConfig, reduce_for_smoke  # noqa: F401
 from .model import SHAPES, Model, ShapeCell, build_model  # noqa: F401

@@ -1,5 +1,11 @@
-"""Hand-rolled optimizer substrate: AdamW, schedules, ZeRO-1 sharding,
-gradient compression."""
+"""Hand-rolled optimizer substrate.
+
+Public surface: ``OptConfig`` / ``adamw_update`` / ``init_opt_state`` /
+``global_norm`` (AdamW with decoupled weight decay and global-norm
+clipping), ``opt_state_shardings`` (ZeRO-1: optimizer moments sharded
+over 'data'), ``make_schedule`` (cosine / linear / constant with
+warmup), and the ``compress`` module (gradient compression hooks).
+"""
 
 from .adamw import (  # noqa: F401
     OptConfig,

@@ -1,7 +1,15 @@
-"""Runtime substrate: straggler models, wall-clock model, fault injection."""
+"""Runtime substrate: straggler models and fault injection.
+
+Public surface: the ``StragglerModel`` family (``make_straggler_model``
+resolves names — none / iid / fixed / deadline / correlated /
+adversarial / bimodal / clustered) and the hard-fault machinery
+(``FaultInjector`` / ``FaultPlan``).  Wall-clock modelling lives in
+``repro.sim`` (a ``LatencyTrace`` + sync policy; the old
+``runtime.latency.simulate_wallclock`` wrapper is gone — use
+``sim.cluster.wallclock_summary``).
+"""
 
 from .faults import FaultInjector, FaultPlan  # noqa: F401
-from .latency import StepTimeModel, simulate_wallclock  # noqa: F401
 from .straggler import (  # noqa: F401
     AdversarialStragglers,
     BimodalStragglers,

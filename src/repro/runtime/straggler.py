@@ -75,7 +75,8 @@ class DeadlineStragglers(StragglerModel):
     """Latency = base + Pareto(alpha) tail; straggler iff latency > deadline.
 
     Matches the empirical 'slowest nodes dictate runtime' premise; the
-    latency draw is reused by runtime.latency for wall-clock estimates.
+    latency draw is reused by repro.sim (LatencyTrace) for the
+    wall-clock co-simulation.
     """
     base: float = 1.0
     tail_scale: float = 0.2

@@ -1,3 +1,10 @@
-"""Serving runtime."""
+"""Serving runtime.
+
+Public surface: ``Request`` and ``ServingEngine`` — continuous-batching
+inference with per-slot deadlines and request hedging (a slot that
+misses its deadline re-issues to another replica, first answer wins):
+the inference-side analogue of the training deadline/error trade
+(docs/architecture.md 3).
+"""
 
 from .engine import Request, ServingEngine  # noqa: F401

@@ -4,7 +4,7 @@ batching slot scheduler.
 Straggler note: gradient coding is a *training* technique (there is no
 gradient sum to code at inference); the serving-side mitigation at scale
 is request replication / deadline hedging, which the scheduler models via
-per-slot deadlines.  See DESIGN.md Sec. 3.
+per-slot deadlines.  See docs/architecture.md §3.
 """
 
 from __future__ import annotations

@@ -2,7 +2,7 @@
 
 trace (sim.traces) -> masks + step times (sim.cluster sync policies)
 -> one batched decode per run (core.engine) -> frontiers (sim.frontier).
-See DESIGN.md §8.
+See docs/architecture.md §8.
 """
 
 from .cluster import (  # noqa: F401
@@ -20,6 +20,7 @@ from .cluster import (  # noqa: F401
 from .frontier import (  # noqa: F401
     FrontierPoint,
     pareto_front,
+    sweep_adaptive,
     sweep_frontier,
     time_to_target_error,
 )

@@ -1,6 +1,6 @@
 """ClusterSim: co-simulate wall-clock and decoding over whole runs.
 
-Dataflow (DESIGN.md §8):
+Dataflow (docs/architecture.md §8):
 
     LatencyTrace [S, n]
         --(sync policy)-->  masks [S, n]  +  step_times [S]
@@ -279,7 +279,7 @@ class ClusterSim:
     def run_distributed(self, *, steps: Optional[int] = None,
                         task_grads: Optional[np.ndarray] = None,
                         mesh=None, impl: str = "xla") -> ClusterRunResult:
-        """The co-simulation executed on REAL devices (DESIGN.md §9).
+        """The co-simulation executed on REAL devices (docs/architecture.md §9).
 
         Same trace -> policy -> masks dataflow as :meth:`run`, but the
         decode happens through ``dist.coded_allreduce``: each device
@@ -326,15 +326,16 @@ class ClusterSim:
 
 
 # --------------------------------------------------------------------------
-# legacy aggregate summary (the old runtime.latency.simulate_wallclock)
+# aggregate summary (absorbed the removed runtime.latency wrapper)
 # --------------------------------------------------------------------------
 
 
 def wallclock_summary(trace: LatencyTrace, policy: str = "deadline",
                       deadline: float = 1.5,
                       compute_scale: float = 1.0) -> dict:
-    """Aggregate wall-clock + straggler stats, old simulate_wallclock
-    semantics folded into the trace API.
+    """Aggregate wall-clock + straggler stats — the PR-2 home of the
+    old ``runtime.latency.simulate_wallclock`` semantics (the wrapper
+    itself is gone; this is the API).
 
     The old implementation compared ``lat * compute_scale <= deadline *
     compute_scale`` — the scale cancels, so the mask is just ``lat <=

@@ -25,8 +25,8 @@ from ..core import registry
 from .cluster import ClusterRunResult, ClusterSim, SyncPolicy, make_policy
 from .traces import LatencyTrace
 
-__all__ = ["FrontierPoint", "sweep_frontier", "pareto_front",
-           "time_to_target_error"]
+__all__ = ["FrontierPoint", "sweep_frontier", "sweep_adaptive",
+           "pareto_front", "time_to_target_error"]
 
 
 @dataclasses.dataclass
@@ -98,6 +98,30 @@ def sweep_frontier(
                     mean_stragglers=res.mean_stragglers,
                     time_to_target=time_to_target_error(res)))
     return out
+
+
+def sweep_adaptive(
+    schemes: Sequence[str],
+    trace: LatencyTrace,
+    *,
+    s: int = 8,
+    error_budget: float = 0.1,
+    seed: int = 0,
+    control_cfg=None,
+) -> List[FrontierPoint]:
+    """The ``adaptive_coder`` policy column of the frontier: one
+    closed-loop AdaptiveCoder run per scheme over the shared trace
+    (docs/adaptive.md).  ``s`` doubles as the static sweep's reference
+    replication — adaptive step times are charged s_live / s for the
+    compute of the live code, so the points are directly comparable
+    with a ``sweep_frontier`` over the same trace at the same ``s``.
+    Lazy import: ``repro.control`` depends on sim, not vice versa."""
+    from ..control.runner import adaptive_frontier_point
+
+    return [adaptive_frontier_point(scheme, trace, s=s,
+                                    error_budget=error_budget,
+                                    cfg=control_cfg, seed=seed)
+            for scheme in schemes]
 
 
 def pareto_front(points: Sequence[FrontierPoint],

@@ -13,8 +13,9 @@ the sync policy is a trace source:
     semantics already implies;
   * recorded cluster traces replay from JSON (``LatencyTrace.load``).
 
-This unifies ``runtime/latency.py`` (which sampled latencies step by
-step) and ``runtime/straggler.py`` (which sampled masks) behind one API:
+This unified the old ``runtime/latency.py`` (which sampled latencies
+step by step; removed in PR 5) and ``runtime/straggler.py`` (which
+samples masks) behind one API:
 a trace is sampled once, then any sync policy in ``sim.cluster`` maps it
 to per-step masks + step times, and the DecodeEngine decodes all the
 masks in one batched call.

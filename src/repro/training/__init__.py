@@ -1,4 +1,12 @@
-"""Coded training loop + elasticity."""
+"""Coded training loop + elasticity + adaptive control.
+
+Public surface: ``CodedTrainConfig`` / ``CodedTrainer`` (fused and
+coded_allreduce dist modes, trace-driven co-simulation via ``trace=`` /
+``sync_policy=``, elastic re-coding on hard faults, AdaptiveCoder
+re-coding via ``controller=``) and ``explicit_master_decode_grads``
+(the literal Algorithm-1 master-side decode the differential tests
+compare against).
+"""
 
 from .train_loop import (  # noqa: F401
     CodedTrainConfig,

@@ -7,7 +7,7 @@ Per step:
   2. the decoder turns (G, mask) into decode weights w;
   3. the pipeline materializes the physical batch with per-row loss
      weights  w_j * G[i,j] / (k*T)  — the decode-as-loss-reweighting
-     identity (DESIGN.md 2.1), so XLA's ordinary gradient all-reduce IS
+     identity (docs/architecture.md §2.1), so XLA's ordinary gradient all-reduce IS
      the coded aggregation;
   4. one jitted train_step (grad + AdamW) under the active mesh.
 
@@ -22,8 +22,17 @@ straggler model, and logs the modelled wall-clock per step
 (``step_time`` / cumulative ``sim_time`` in history) — the ClusterSim
 dataflow riding the real training loop.
 
+Adaptive control: pass ``controller=`` (a ``repro.control.AdaptiveCoder``
+or anything with its observe/decide protocol) and the trainer feeds the
+controller each step's mask / latencies / realized decode error, then
+applies the actions it returns — ``set_s`` re-codes through the elastic
+rebuild path (code, assignment, pipeline, engine, allreduce, step_fn),
+``set_decoder`` / ``set_deadline`` recompute the trace schedule.  The
+system picks its own operating point on the paper's frontier
+(docs/adaptive.md).
+
 Distributed execution: ``dist_mode="coded_allreduce"`` replaces step 3-4
-with the shard_map path of ``dist.coded_allreduce`` (DESIGN.md §9): the
+with the shard_map path of ``dist.coded_allreduce`` (docs/architecture.md §9): the
 batch is sliced into per-device microbatches (each device computes only
 its workers' assigned task-gradients), and decoding happens as the
 weighted psum over the 1-D worker mesh.  With a trace attached, the
@@ -76,19 +85,25 @@ class CodedTrainConfig:
     log_every: int = 10
     exact_decode_renorm: bool = True  # rescale w so sum(G@w)=k (unbiased-ish)
     decode_cache_size: int = 512      # mask->weights LRU entries (engine)
-    dist_mode: str = "fused"          # fused | coded_allreduce (DESIGN.md §9)
+    dist_mode: str = "fused"          # fused | coded_allreduce (docs/architecture.md §9)
 
 
 class CodedTrainer:
     def __init__(self, model: Model, tcfg: CodedTrainConfig,
                  straggler_model: Optional[StragglerModel] = None,
                  fault_injector: Optional[FaultInjector] = None,
-                 mesh=None, trace=None, sync_policy=None):
+                 mesh=None, trace=None, sync_policy=None,
+                 controller=None):
         self.model = model
         self.tcfg = tcfg
         self.straggler = straggler_model or NoStragglers()
         self.faults = fault_injector or FaultInjector()
         self.mesh = mesh
+        # AdaptiveCoder protocol (repro.control): observe(step, mask,
+        # latencies, decode_err) each step, decide(step) at the top of
+        # the next one; returned actions are applied through the same
+        # rebuild path as elastic faults (docs/adaptive.md)
+        self.controller = controller
         if tcfg.dist_mode not in ("fused", "coded_allreduce"):
             raise ValueError(f"dist_mode {tcfg.dist_mode!r} not in "
                              f"('fused', 'coded_allreduce')")
@@ -108,6 +123,16 @@ class CodedTrainer:
                 raise ValueError(f"trace has n={trace.n} workers, config "
                                  f"has n_workers={tcfg.n_workers}")
             self.sync_policy = make_policy(sync_policy or "deadline")
+            if controller is not None:
+                from ..sim.cluster import DeadlinePolicy
+                if not isinstance(self.sync_policy, DeadlinePolicy):
+                    # the controller prices/emits set_deadline actions;
+                    # silently dropping them would desync its tracked
+                    # operating point from the trainer's reality
+                    raise ValueError(
+                        "controller= with trace= requires a DeadlinePolicy "
+                        f"sync policy (its deadline is a controller "
+                        f"actuator); got {type(self.sync_policy).__name__}")
         elif sync_policy is not None:
             raise ValueError("sync_policy requires trace=")
         self._build_code(tcfg.n_workers)
@@ -173,6 +198,43 @@ class CodedTrainer:
         self._trace_weights = self.allreduce.weights_for_masks(
             masks, method=self.tcfg.decoder,
             renorm=self.tcfg.exact_decode_renorm)
+
+    # ------------- adaptive re-coding (repro.control) -------------
+    def _apply_action(self, action) -> None:
+        """Apply one controller action (docs/adaptive.md).
+
+        ``set_s`` rebuilds code / assignment / pipeline / engine /
+        allreduce AND the jitted step_fn — exactly the elastic-fault
+        path, so partition-derived closures (ce_fix, D) can never go
+        stale.  ``set_decoder`` / ``set_deadline`` leave the code alone
+        (no resample) but recompute the distributed trace schedule,
+        whose masks/weights depend on both.
+        """
+        t = self.tcfg
+        if action.kind == "set_s":
+            self.tcfg = dataclasses.replace(t, s=int(action.value))
+            self._build_code(self.assignment.n)
+            self._step_fn = self._make_step_fn()
+            return
+        if action.kind == "set_decoder":
+            decoder = str(action.value)
+            REG.get(t.code).require_decoder(decoder)
+            self.tcfg = dataclasses.replace(t, decoder=decoder)
+            if self._trace_masks is not None:
+                self._prepare_trace_schedule()
+            return
+        if action.kind == "set_deadline":
+            from ..sim.cluster import DeadlinePolicy
+            if isinstance(self.sync_policy, DeadlinePolicy):
+                self.sync_policy = dataclasses.replace(
+                    self.sync_policy, deadline=float(action.value))
+                if self._trace_masks is not None:
+                    self._prepare_trace_schedule()
+            # without a trace no latencies are observed, so controllers
+            # never emit deadline actions; the trace+non-deadline-policy
+            # combination is rejected in __init__
+            return
+        raise ValueError(f"unknown controller action kind {action.kind!r}")
 
     # ------------- jitted step -------------
     def _make_step_fn(self) -> Callable:
@@ -271,12 +333,30 @@ class CodedTrainer:
                     # (ce_fix, D) — rebuild with the new code
                     self._step_fn = self._make_step_fn()
 
+                # --- controller decision -> adaptive re-code ---
+                if self.controller is not None:
+                    action = self.controller.decide(step)
+                    if action is not None:
+                        self._apply_action(action)
+
                 # --- straggler mask -> decode weights -> coded batch ---
                 mask, step_time = self._mask_and_time(step, self.assignment.n)
                 if self._trace_weights is not None:
                     w = self._trace_weights[step % self._trace_weights.shape[0]]
                 else:
                     w = self.decode_weights_for(mask)
+
+                if self.controller is not None:
+                    # realized decode error of the weights in effect —
+                    # the calibration signal closing the control loop
+                    derr = float(((self.code.G @ w - 1.0) ** 2).sum()
+                                 ) / self.code.k
+                    lat = None
+                    if self.trace is not None:
+                        lat = self.trace.latencies[step % self.trace.steps]
+                        lat = lat[:mask.shape[0]]
+                    self.controller.observe(step, mask, latencies=lat,
+                                            decode_err=derr)
                 if self.allreduce is not None:
                     batch_np = self.pipeline.device_batch_for_step(
                         step, w, self.allreduce.partition)
@@ -289,6 +369,9 @@ class CodedTrainer:
                     state["params"], state["opt"], batch)
 
                 if step % max(t.log_every, 1) == 0 or step == start_step + steps - 1:
+                    # read the LIVE config: controller actions may have
+                    # replaced self.tcfg since the loop started
+                    live = self.tcfg
                     rec = {"step": step,
                            "loss": float(metrics["loss"]),
                            "mean_ce": float(metrics["mean_ce"]),
@@ -299,9 +382,11 @@ class CodedTrainer:
                                         DEC.default_rho(self.code.k,
                                                         int(mask.sum()),
                                                         self.code.s))
-                               if t.decoder == "onestep" else
+                               if live.decoder == "onestep" else
                                DEC.err(self.code.G[:, mask])) / self.code.k,
-                           "n_workers": self.assignment.n}
+                           "n_workers": self.assignment.n,
+                           "s": self.code.s,
+                           "decoder": live.decoder}
                     if step_time is not None:
                         rec["step_time"] = float(step_time)
                         rec["sim_time"] = float(self.sim_time)

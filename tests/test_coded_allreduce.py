@@ -1,4 +1,4 @@
-"""CodedAllReduce: differential, property, and golden tests (DESIGN.md §9).
+"""CodedAllReduce: differential, property, and golden tests (docs/architecture.md §9).
 
 Three layers of trust for the shard_map coded aggregation:
 
@@ -8,8 +8,10 @@ Three layers of trust for the shard_map coded aggregation:
     registry-family x {onestep, optimal} x {all-alive, deadline-mask}
     cell (the scheme list is DERIVED from core.registry, so new
     families — sbm, expander — hit the 8-device lane the day they are
-    registered), and the decoded gradient identical to the plain
-    uncoded gradient when the mask is all-alive and the decode exact.
+    registered), the decoded gradient identical to the plain
+    uncoded gradient when the mask is all-alive and the decode exact,
+    and mean_ce parity across mid-run AdaptiveCoder re-codes (set_s /
+    set_decoder / set_deadline through a scripted controller).
   * PROPERTY — worker->device partitioning, per-device batch slicing and
     the ELL packing hold at ragged shapes (n not a multiple of the
     device count, k not a multiple of n, a single-device mesh).
@@ -397,6 +399,53 @@ def test_differential_all_alive_equals_uncoded_gradient_fp64():
     for c in res:
         assert c["exact"] < 1e-9, c            # the decode really is exact
         assert c["absdiff"] < 1e-10 * max(c["scale"], 1.0) + 1e-12, c
+
+
+def test_adaptive_recode_metrics_match_fused_fp64():
+    """ISSUE-5 acceptance: a mid-run controller re-code (set_s at step
+    0 AND mid-run, plus decoder/deadline switches) preserves mean_ce
+    parity between dist_mode='coded_allreduce' and the fused path to
+    1e-10, fp64 on a real 8-device mesh.  Both trainers share one
+    scripted action plan — identical observations take identical
+    action sequences, the control-loop SPMD property."""
+    res = _run_subprocess(prelude=_TOY_MODEL, body="""
+        from repro.control import Action, ScriptedController
+        from repro.sim.traces import make_trace
+        from repro.training import CodedTrainConfig, CodedTrainer
+
+        model = ToyModel()
+        trace = make_trace("pareto", steps=12, n=8, seed=7)
+        out = {}
+        for mode in ("fused", "coded_allreduce"):
+            plan = {0: Action("set_s", 4),        # re-code at step 0
+                    3: Action("set_decoder", "optimal"),
+                    6: Action("set_s", 2),        # mid-run re-code
+                    9: Action("set_deadline", 1.2)}
+            tr = CodedTrainer(model, CodedTrainConfig(
+                code="frc", n_workers=8, s=2, decoder="onestep",
+                rows_per_slot=1, seq_len=16, steps=12, seed=0,
+                log_every=1, dist_mode=mode),
+                trace=trace, sync_policy="deadline",
+                controller=ScriptedController(plan))
+            hist = tr.run()["history"]
+            out[mode] = {"mean_ce": [h["mean_ce"] for h in hist],
+                         "loss": [h["loss"] for h in hist],
+                         "s": [h["s"] for h in hist],
+                         "decoder": [h["decoder"] for h in hist]}
+        print("RESULT:" + json.dumps(dict(out,
+                                          n_devices=jax.device_count())))
+    """)
+    assert res["n_devices"] == 8
+    fused, dist = res["fused"], res["coded_allreduce"]
+    assert fused["s"] == dist["s"] == [4] * 6 + [2] * 6
+    assert fused["decoder"] == dist["decoder"] \
+        == ["onestep"] * 3 + ["optimal"] * 9
+    a = np.asarray(fused["mean_ce"])
+    b = np.asarray(dist["mean_ce"])
+    scale = np.abs(a).max()
+    assert np.abs(a - b).max() < 1e-10 * max(scale, 1.0), (a - b)
+    np.testing.assert_allclose(dist["loss"], fused["loss"],
+                               rtol=1e-10, atol=1e-12)
 
 
 def test_ragged_workers_metrics_match_fused_8_devices():

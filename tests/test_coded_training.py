@@ -34,7 +34,7 @@ def make_trainer(model, straggler=None, faults=None, **kw):
 
 
 class TestFusedDecodeEquivalence:
-    """DESIGN.md 2.1: loss-reweighted all-reduce == explicit master decode."""
+    """docs/architecture.md §2.1: loss-reweighted all-reduce == explicit master decode."""
 
     @pytest.mark.parametrize("code,decoder", [
         ("frc", "onestep"), ("bgc", "onestep"),

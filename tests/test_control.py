@@ -1,0 +1,299 @@
+"""AdaptiveCoder subsystem tests (docs/adaptive.md).
+
+Covers the ISSUE-5 edge cases: a re-code event at step 0, convergence
+to minimum redundancy + one-step decoding on an all-alive trace,
+hysteresis bounding re-code churn on an alternating bimodal trace, and
+the estimator / policy / runner unit surfaces.  The fused == dist
+metric parity across a mid-run re-code lives with the other 8-device
+differentials in tests/test_coded_allreduce.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.control import (Action, AdaptiveCoder, ControlConfig,
+                           ScriptedController, StragglerEstimator,
+                           error_band, run_adaptive_sim)
+from repro.core import registry
+from repro.sim.frontier import sweep_adaptive, sweep_frontier
+from repro.sim.traces import LatencyTrace, make_trace
+
+
+# ------------------------------ estimator -----------------------------------
+
+def test_estimator_erasure_rates_converge():
+    est = StragglerEstimator(8, alpha=0.2)
+    mask = np.ones(8, dtype=bool)
+    mask[[2, 5]] = False                      # workers 2, 5 always erased
+    for _ in range(100):
+        est.update(mask)
+    st = est.state()
+    assert st.erasure[2] == pytest.approx(1.0, abs=1e-6)
+    assert st.erasure[0] == pytest.approx(0.0, abs=1e-6)
+    assert st.mean_erasure == pytest.approx(0.25, abs=1e-6)
+
+
+def test_estimator_bias_correction_early_steps():
+    """One observation must already estimate the observed rate (Adam
+    debias), not a zero-diluted value."""
+    est = StragglerEstimator(4, alpha=0.1)
+    est.update(np.array([True, True, False, False]))
+    assert est.state().mean_erasure == pytest.approx(0.5)
+
+
+def test_estimator_block_correlation_signs():
+    # block-aligned erasures -> score ~ 1
+    est = StragglerEstimator(16, alpha=0.3, blocks=4)
+    mask = np.ones(16, dtype=bool)
+    mask[0:4] = False                         # exactly block 0
+    for _ in range(50):
+        est.update(mask)
+    assert est.state().block_corr > 0.9
+    # placement-independent erasures -> score ~ 0
+    est2 = StragglerEstimator(16, alpha=0.3, blocks=4)
+    rng = np.random.default_rng(0)
+    for _ in range(400):
+        m = np.ones(16, dtype=bool)
+        m[rng.choice(16, 4, replace=False)] = False
+        est2.update(m)
+    assert abs(est2.state().block_corr) < 0.2
+
+
+def test_estimator_latency_window_lookups():
+    est = StragglerEstimator(4, window=10)
+    for t in range(25):
+        est.update(np.ones(4, dtype=bool),
+                   latencies=np.array([1.0, 1.0, 1.0, 3.0]))
+    st = est.state()
+    assert st.lat_rows.shape == (10, 4)       # window bound respected
+    assert st.erasure_at(2.0) == pytest.approx(0.25)
+    assert st.step_time_at(2.0) == pytest.approx(2.0)
+    assert st.step_time_at(5.0) == pytest.approx(3.0)
+    assert st.latency_quantile(0.5) == pytest.approx(1.0)
+
+
+def test_estimator_validation():
+    with pytest.raises(ValueError):
+        StragglerEstimator(0)
+    est = StragglerEstimator(4)
+    with pytest.raises(ValueError):
+        est.update(np.ones(5, dtype=bool))
+    with pytest.raises(ValueError):
+        est.update(np.ones(4, dtype=bool), latencies=np.ones(3))
+
+
+# ------------------------------ error bands ---------------------------------
+
+def test_error_band_shapes():
+    # more stragglers -> more predicted error, for both decoders
+    for dec in ("onestep", "optimal"):
+        bands = [error_band("bgc", 64, 8, d, dec) for d in (0.0, 0.2, 0.4)]
+        assert bands == sorted(bands)
+    # optimal never above one-step at equal (s, delta) for the families
+    # with uncovered-task estimates
+    for fam in ("bgc", "expander", "frc"):
+        s = 8
+        assert error_band(fam, 64, s, 0.2, "optimal") \
+            <= error_band(fam, 64, s, 0.2, "onestep") + 1e-12
+    # frc one-step at delta=0 decodes exactly
+    assert error_band("frc", 64, 8, 0.0, "onestep") == pytest.approx(0.0)
+    # full erasure (r = 0) saturates at total error
+    assert error_band("bgc", 8, 4, 0.95, "onestep") == 1.0
+
+
+# ------------------------------ actions / config ----------------------------
+
+def test_action_and_config_validation():
+    with pytest.raises(ValueError):
+        Action("set_gain", 1.0)
+    with pytest.raises(ValueError):
+        ControlConfig(error_budget=0.0)
+    with pytest.raises(ValueError):
+        ControlConfig(improve_margin=1.5)
+    with pytest.raises(KeyError):
+        AdaptiveCoder("nope", 8, s=2)         # registry unknown-scheme
+    with pytest.raises(ValueError):
+        AdaptiveCoder("frc", 8, s=2, decoder="nope")
+
+
+def test_scripted_controller_plan():
+    ctrl = ScriptedController({3: Action("set_s", 4)})
+    assert ctrl.decide(0) is None
+    act = ctrl.decide(3)
+    assert act.kind == "set_s" and act.value == 4
+    assert ctrl.actions == [(3, act)]
+
+
+# ------------------------------ controller edge cases -----------------------
+
+def test_all_alive_trace_converges_to_min_s_onestep():
+    """ISSUE-5 edge case: an all-alive fleet needs no redundancy — the
+    controller must walk s down the legal ladder to its minimum and
+    keep the cheap one-step decoder."""
+    tr = make_trace("none", steps=200, n=32, base=1.0, slow=1.0)
+    cfg = ControlConfig(error_budget=0.05, warmup=5, cooldown=10)
+    res = run_adaptive_sim("frc", tr, cfg, s=8, seed=0)
+    assert res.s_traj[-1] == 1
+    assert res.decoder_traj[-1] == "onestep"
+    assert res.errors.max() == pytest.approx(0.0, abs=1e-12)
+    # monotone descent, one rung at a time
+    assert (np.diff(res.s_traj) <= 0).all()
+    # and the shed compute shows up as modelled wall-clock
+    assert res.step_times[-1] < res.step_times[0] / 4
+
+
+def test_recode_event_at_step_zero():
+    """A controller may re-code before the first decode (warm-start
+    action at step 0): the run must use the new s from the very first
+    mask."""
+    tr = make_trace("pareto", steps=20, n=16, seed=3)
+
+    class Step0Coder(AdaptiveCoder):
+        def decide(self, step):
+            if step == 0:
+                return self.policy._apply(0, Action("set_s", 4))
+            return None
+
+    coder = Step0Coder("bgc", 16, ControlConfig(), s=8)
+    # drive the sim loop manually through the same protocol
+    res = run_adaptive_sim("bgc", tr, ControlConfig(warmup=10**9), s=8,
+                           seed=0)
+    assert (res.s_traj == 8).all()            # inert controller: no change
+    act = coder.decide(0)
+    assert act.kind == "set_s" and coder.s == 4
+
+
+def test_hysteresis_no_oscillation_on_alternating_bimodal():
+    """ISSUE-5 edge case: a trace alternating between an all-fast and a
+    20%-slow regime every few steps must not make the controller flip
+    s / decoder back and forth — EW smoothing + cooldown + the improve
+    margin bound the re-code count."""
+    rng = np.random.default_rng(7)
+    S, n = 300, 32
+    lat = np.full((S, n), 1.0) * np.exp(0.05 * rng.standard_normal((S, n)))
+    slow = rng.choice(n, round(0.2 * n), replace=False)
+    for t in range(S):
+        if (t // 4) % 2 == 1:                 # slow regime every other 4
+            lat[t, slow] *= 3.0
+    tr = LatencyTrace(lat, source="alternating-bimodal")
+    cfg = ControlConfig(error_budget=0.1, warmup=5, cooldown=10)
+    res = run_adaptive_sim("bgc", tr, cfg, s=8, seed=0)
+    assert res.recodes <= 8                   # bounded churn, no thrash
+    # and s never ping-pongs: at most recodes sign changes in the traj
+    flips = np.sum(np.abs(np.diff(np.sign(np.diff(
+        res.s_traj[res.s_traj != np.roll(res.s_traj, 1)])))) > 0)
+    assert flips <= 3
+
+
+def test_adaptive_sim_batched_decode_budget():
+    """Decoding stays batched: ~S / feedback_every calls, not S."""
+    tr = make_trace("bimodal", steps=200, n=32, seed=0)
+    cfg = ControlConfig(error_budget=0.1, warmup=5, cooldown=10)
+    res = run_adaptive_sim("bgc", tr, cfg, s=8, seed=0, feedback_every=10)
+    assert res.batch_calls <= 200 // 10 + res.recodes + 1
+    assert res.batch_calls >= 2
+
+
+def test_adaptive_dominates_static_cells_bimodal():
+    """The E11 acceptance shape, at test scale: the adaptive cell beats
+    every static (policy, decoder) cell's time-to-target on a bimodal
+    trace."""
+    tr = make_trace("bimodal", steps=300, n=64, seed=0)
+    static = sweep_frontier(("bgc",), ("sync", "deadline", "backup",
+                                       "adaptive"), tr, s=8,
+                            decoders=("onestep", "optimal"))
+    apt = sweep_adaptive(("bgc",), tr, s=8, error_budget=0.1, seed=0)[0]
+    assert apt.policy == "adaptive_coder"
+    assert all(apt.time_to_target < p.time_to_target for p in static)
+
+
+# ------------------------------ trainer integration -------------------------
+
+def _toy_model():
+    """Tiny fp32 model with the repo's loss_fn contract (loss_weight
+    per row, (loss, aux) return) — shared by the trainer-integration
+    tests below."""
+    import types
+
+    import jax
+    import jax.numpy as jnp
+
+    class ToyModel:
+        cfg = types.SimpleNamespace(vocab=32, schedule="cosine")
+
+        def init(self, key):
+            return {"w": jax.random.normal(key, (16,)) * 0.1}
+
+        def loss_fn(self, params, batch):
+            x = batch["tokens"].astype(jnp.float32)
+            y = batch["labels"].astype(jnp.float32).mean(-1)
+            row = (x @ params["w"] - y) ** 2
+            wloss = (row * batch["loss_weight"].astype(jnp.float32)).sum()
+            return wloss, {"loss": wloss, "mean_ce": row.mean()}
+
+    return ToyModel()
+
+
+def test_trainer_rejects_controller_with_non_deadline_policy():
+    """With a trace attached the controller emits set_deadline actions;
+    a sync policy that cannot apply them (backup/sync/adaptive) must be
+    rejected up front instead of silently desyncing the controller's
+    tracked operating point."""
+    from repro.training import CodedTrainConfig, CodedTrainer
+
+    tr = make_trace("pareto", steps=4, n=8, seed=0)
+    coder = AdaptiveCoder("bgc", 8, s=2)
+    with pytest.raises(ValueError, match="DeadlinePolicy"):
+        CodedTrainer(_toy_model(), CodedTrainConfig(n_workers=8, s=2),
+                     trace=tr, sync_policy="backup", controller=coder)
+    # deadline policy is fine
+    t = CodedTrainer(_toy_model(), CodedTrainConfig(n_workers=8, s=2),
+                     trace=tr, sync_policy="deadline", controller=coder)
+    assert t.controller is coder
+
+
+@pytest.mark.slow
+def test_trainer_applies_controller_actions():
+    """CodedTrainer + AdaptiveCoder protocol: scripted actions re-code
+    mid-run (including step 0) and history records the live (s,
+    decoder); the engine/assignment/pipeline are rebuilt."""
+    from repro.training import CodedTrainConfig, CodedTrainer
+
+    trace = make_trace("pareto", steps=8, n=8, seed=7)
+    plan = {0: Action("set_s", 4), 3: Action("set_decoder", "optimal"),
+            5: Action("set_deadline", 1.2)}
+    tr = CodedTrainer(_toy_model(), CodedTrainConfig(
+        code="frc", n_workers=8, s=2, decoder="onestep", rows_per_slot=1,
+        seq_len=16, steps=8, seed=0, log_every=1),
+        trace=trace, sync_policy="deadline",
+        controller=ScriptedController(plan))
+    hist = tr.run()["history"]
+    assert [h["s"] for h in hist] == [4] * 8   # step-0 re-code took effect
+    assert [h["decoder"] for h in hist] == ["onestep"] * 3 + ["optimal"] * 5
+    assert tr.code.s == 4 and tr.tcfg.decoder == "optimal"
+    assert tr.sync_policy.deadline == pytest.approx(1.2)
+    # post-deadline-change masks come from the new 1.2s cutoff
+    assert hist[-1]["stragglers"] == int(
+        (trace.latencies[7] > 1.2).sum())
+
+
+@pytest.mark.slow
+def test_trainer_adaptive_coder_closed_loop():
+    """A real AdaptiveCoder in the trainer loop stays inside the legal
+    ladder and produces finite metrics (smoke of the closed loop)."""
+    from repro.training import CodedTrainConfig, CodedTrainer
+
+    trace = make_trace("bimodal", steps=30, n=16, seed=1)
+    coder = AdaptiveCoder("bgc", 16,
+                          ControlConfig(error_budget=0.1, warmup=4,
+                                        cooldown=6),
+                          s=4)
+    tr = CodedTrainer(_toy_model(), CodedTrainConfig(
+        code="bgc", n_workers=16, s=4, decoder="onestep", rows_per_slot=1,
+        seq_len=16, steps=30, seed=0, log_every=1),
+        trace=trace, sync_policy="deadline", controller=coder)
+    hist = tr.run()["history"]
+    fam = registry.get("bgc")
+    assert all(np.isfinite(h["mean_ce"]) for h in hist)
+    assert all(1 <= h["s"] <= 16 for h in hist)
+    assert all(fam.supports_decoder(h["decoder"]) for h in hist)

@@ -1,0 +1,84 @@
+"""Executable documentation: the README / docs code snippets run in CI.
+
+Scrapes every ```python fence from README.md and docs/*.md and executes
+each one in its own subprocess (PYTHONPATH=src, CPU jax, 8 forced host
+devices so device-mesh examples exercise a real 8-way world).  A
+documented example that stops working fails this suite instead of
+silently rotting.
+
+Conventions (documented in docs/benchmarks.md): snippets are
+self-contained and seconds-scale; a fence whose first line contains
+``no-exec`` is skipped; bash fences are never executed.
+"""
+
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+FENCE_RE = re.compile(r"^```python\n(.*?)^```", re.S | re.M)
+
+# every markdown file whose snippets are part of the public docs
+DOC_FILES = ("README.md", "DESIGN.md") + tuple(
+    f"docs/{p.name}" for p in sorted((REPO / "docs").glob("*.md"))
+)
+
+
+def iter_snippets():
+    for rel in DOC_FILES:
+        path = REPO / rel
+        if not path.exists():
+            continue
+        text = path.read_text()
+        for match in FENCE_RE.finditer(text):
+            code = match.group(1)
+            stripped = code.strip()
+            if not stripped:
+                continue
+            if "no-exec" in stripped.splitlines()[0]:
+                continue
+            line = text[: match.start()].count("\n") + 2
+            yield pytest.param(code, id=f"{rel}:{line}")
+
+
+SNIPPETS = list(iter_snippets())
+
+
+def test_scraper_found_the_documented_examples():
+    """Guard the scraper itself: the docs ship a known minimum of
+    executable examples (README quickstart-adjacent snippets plus the
+    families / adaptive pages).  If this drops, the regex or the docs
+    broke — not the examples."""
+    assert len(SNIPPETS) >= 5
+    ids = {p.id for p in SNIPPETS}
+    assert any(i.startswith("README.md") for i in ids)
+    assert any(i.startswith("docs/adaptive.md") for i in ids)
+    assert any(i.startswith("docs/families.md") for i in ids)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("code", SNIPPETS)
+def test_doc_snippet_executes(code):
+    env = dict(
+        os.environ,
+        PYTHONPATH=str(REPO / "src"),
+        JAX_PLATFORMS="cpu",
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        cwd=REPO,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=560,
+    )
+    assert proc.returncode == 0, (
+        f"documented snippet failed\n--- code ---\n{code}\n"
+        f"--- stderr ---\n{proc.stderr[-3000:]}"
+    )

@@ -250,7 +250,7 @@ def test_property_algorithmic_error_monotone(k, s, frac, seed):
 @given(k=st.integers(4, 32), p=st.integers(10, 300), seed=st.integers(0, 9999))
 def test_property_accumulate_linear(k, p, seed):
     """coded_accumulate is linear in the weights (decode-as-reweighting
-    identity, DESIGN.md 2.1)."""
+    identity, docs/architecture.md §2.1)."""
     rng = np.random.default_rng(seed)
     g = rng.standard_normal((k, p)).astype(np.float32)
     w1 = rng.standard_normal(k).astype(np.float32)

@@ -90,7 +90,7 @@ def test_prefill_decode_consistency(engine):
 ])
 def test_straggler_masks_deterministic_per_step(model):
     """Every host derives the identical mask from (seed, step) — the
-    SPMD no-communication property (DESIGN.md 2.1)."""
+    SPMD no-communication property (docs/architecture.md §2.1)."""
     for step in (0, 1, 17):
         a = model.sample(step, 16)
         b = model.sample(step, 16)

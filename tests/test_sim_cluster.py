@@ -1,6 +1,6 @@
 """ClusterSim subsystem tests: traces, sync policies, the one-batched-
-decode-per-run invariant, frontiers, and parity of the deprecated
-runtime.latency.simulate_wallclock wrapper with the pre-ClusterSim loop."""
+decode-per-run invariant, frontiers, and the wallclock_summary
+aggregate (sole successor of the removed runtime.latency wrapper)."""
 
 import numpy as np
 import pytest
@@ -216,51 +216,28 @@ def test_time_to_target_inflates_with_error():
     assert time_to_target_error(res) == pytest.approx(100.0 * res.total_time)
 
 
-# --------------- deprecated simulate_wallclock parity -----------------------
+# --------------------- wallclock_summary aggregate --------------------------
 
-def _legacy_simulate_wallclock(model, n, steps, policy="deadline",
-                               deadline=1.5, compute_scale=1.0):
-    """Verbatim copy of the pre-ClusterSim runtime.latency loop."""
-    total, masks = 0.0, []
-    for t in range(steps):
-        lat_raw = model.latencies(t, n)
-        lat = lat_raw * compute_scale
-        if policy == "sync":
-            total += float(lat.max())
-        elif policy == "deadline":
-            total += float(min(deadline * compute_scale, lat.max()))
-        elif policy == "backup":
-            total += float(np.quantile(lat, 0.95))
-        masks.append(lat_raw * compute_scale
-                     <= deadline * compute_scale if policy == "deadline"
-                     else np.ones(n, bool))
-    masks = np.asarray(masks)
-    return {
-        "total_time": total,
-        "mean_step_time": total / steps,
-        "mean_stragglers": float((~masks).sum(1).mean()),
-        "worst_stragglers": int((~masks).sum(1).max()),
-    }
-
-
-@pytest.mark.parametrize("model", [
-    DeadlineStragglers(seed=11, tail_scale=0.4),
-    # mask-only model: the legacy loop used its unit-latency stub, NOT
-    # the two-point lift the co-simulation applies — parity must hold
-    FixedFractionStragglers(delta=0.25, seed=11),
-])
-@pytest.mark.parametrize("policy", ["sync", "deadline", "backup"])
-@pytest.mark.parametrize("scale", [1.0, 2.5])
-def test_wallclock_wrapper_parity_with_legacy_loop(model, policy, scale):
-    from repro.runtime.latency import simulate_wallclock
-    want = _legacy_simulate_wallclock(model, 24, 40, policy=policy,
-                                      deadline=1.5, compute_scale=scale)
-    with pytest.warns(DeprecationWarning):
-        got = simulate_wallclock(model, 24, 40, policy=policy,
-                                 deadline=1.5, compute_scale=scale)
-    assert got.keys() == want.keys()
-    for key in want:
-        assert got[key] == pytest.approx(want[key], rel=1e-12), key
+def test_wallclock_summary_semantics():
+    """The aggregate summary (which absorbed the removed
+    runtime.latency.simulate_wallclock): deadline masks on the unscaled
+    trace, step times on the scaled one; sync/backup report all-ones
+    masks (the documented legacy quirk)."""
+    tr = trace_from_model(DeadlineStragglers(seed=11, tail_scale=0.4),
+                          steps=40, n=24)
+    for scale in (1.0, 2.5):
+        got = wallclock_summary(tr, policy="deadline", deadline=1.5,
+                                compute_scale=scale)
+        masks = tr.latencies <= 1.5
+        times = np.minimum(1.5 * scale, tr.latencies.max(axis=1) * scale)
+        assert got["total_time"] == pytest.approx(times.sum(), rel=1e-12)
+        assert got["mean_stragglers"] == pytest.approx(
+            (~masks).sum(1).mean())
+        assert got["worst_stragglers"] == int((~masks).sum(1).max())
+    for policy in ("sync", "backup"):
+        assert wallclock_summary(tr, policy=policy)["mean_stragglers"] == 0.0
+    with pytest.raises(ValueError):
+        wallclock_summary(tr, policy="nope")
 
 
 def test_wallclock_summary_bimodal_trade():
