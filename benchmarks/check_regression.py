@@ -63,6 +63,15 @@ def _extract_wallclock_frontier(payload: dict) -> dict:
         key = f"advantage_{trace_name}"
         if key in adaptive:
             out[f"adaptive_advantage[{trace_name}]"] = float(adaptive[key])
+    # decode-overlap ratio: synchronous time-to-target over the
+    # staleness=1 pipelined one (>= 1 means overlap pays for itself;
+    # sits far below the 2x gate floor, so reported informationally —
+    # the hard staleness1_tt_le_sync floor lives in the benchmark)
+    staleness = payload.get("staleness", {})
+    tt = {r["staleness"]: r["time_to_target"]
+          for r in staleness.get("rows", ())}
+    if 0 in tt and 1 in tt and tt[1] > 0:
+        out["staleness_overlap[bimodal]"] = float(tt[0] / tt[1])
     return out
 
 

@@ -11,11 +11,17 @@ Python loop over trials:
     the one-step (Algorithm 1), ridge/optimal (Algorithm 2) and
     algorithmic (Lemma 12) decoders, plus the ignore-stragglers
     baseline.  The optimal decoder has two strategies
-    (``optimal_impl``): exact batched pinv, and the masked-Gram normal
-    equations — ``A_b^T A_b = diag(m_b) (G^T G) diag(m_b)``, so the
-    Gram forms once per code and each mask costs O(n^2) + a batched
-    LAPACK solve, the fast path for the sbm/expander least-squares
-    frontiers.
+    (``optimal_impl``): the masked-Gram normal equations —
+    ``A_b^T A_b = diag(m_b) (G^T G) diag(m_b)``, so the Gram forms once
+    per code and each mask costs O(n^2) + a batched LAPACK solve (the
+    default, and the fast path for the sbm/expander least-squares
+    frontiers) — and exact batched pinv, the explicit opt-in
+    scalar-oracle path for numpy/ridge=0 exactness tests.
+  * ``decode_apply_batch(masks, messages)`` fuses the one-step decode
+    into the gradient accumulate itself: ``diag(scales) masks @
+    messages`` in one pass, never materializing the ``[B, n]`` weight
+    ensemble (the kernels.fused_decode_apply hot path used by
+    CodedAllReduce's pipelined aggregation).
   * backends: ``numpy`` (BLAS batched, float64 — the CPU master path),
     ``xla`` / ``pallas`` / ``pallas_interpret`` (the batched-grid Pallas
     kernels in kernels.batched_decode; fp32).  The Pallas one-step path
@@ -86,11 +92,12 @@ class DecodeEngine:
         self.ridge = ridge
         self.iters = iters
         self.sparse = sparse
-        # least-squares strategy: 'pinv' = exact min-norm batched pinv
-        # (matches decoding.optimal_weights to solver rounding); 'gram' =
-        # masked-Gram normal equations (one O(k n^2) Gram, O(n^2)/mask —
-        # the fast path for large ensembles, ridge-regularized); 'auto' =
-        # pinv on the numpy backend with ridge == 0, gram otherwise
+        # least-squares strategy: 'gram' = masked-Gram normal equations
+        # (one O(k n^2) Gram, O(n^2)/mask — the fast path for large
+        # ensembles, ridge-regularized); 'pinv' = exact min-norm batched
+        # pinv (matches decoding.optimal_weights to solver rounding —
+        # the explicit opt-in for numpy/ridge=0 exact-oracle tests);
+        # 'auto' = gram (E10's speedup[optimal] gate pins this default)
         self.optimal_impl = optimal_impl
         self._gram = None               # lazy G^T G / G^T 1 for 'gram'
         # s in rho = k/(r s): the caller's nominal tasks/worker when
@@ -104,6 +111,9 @@ class DecodeEngine:
         # number of decode_batch invocations — ClusterSim's tests assert
         # one batched decode per (scheme, policy) run against this
         self.batch_calls = 0
+        # number of fused decode-apply scale computations (decode_batch
+        # is NOT incremented on the fused path: no weight ensemble)
+        self.fused_calls = 0
 
     # ------------------------------------------------------------------
     # helpers
@@ -192,8 +202,7 @@ class DecodeEngine:
         G = self.code.G
         mode = self.optimal_impl
         if mode == "auto":
-            mode = "pinv" if (self.backend == "numpy" and self.ridge == 0.0) \
-                else "gram"
+            mode = "gram"
         if mode == "pinv":
             # exact min-norm batched pinv (the scalar-oracle-equivalent
             # reference path; numpy only)
@@ -262,6 +271,56 @@ class DecodeEngine:
         W = masks * (self.k / cover)[:, None]
         errs = decoding.err_batch(G, W)
         return BatchDecode(weights=W, errors=errs)
+
+    # ------------------------------------------------------------------
+    # fused decode-apply (one-step decode folded into the accumulate)
+    # ------------------------------------------------------------------
+
+    def onestep_scales(self, masks: np.ndarray, *,
+                       renorm: bool = False) -> np.ndarray:
+        """[B] per-mask scalar s_b with one-step weights w_b = s_b m_b.
+
+        renorm=False gives the raw rho_b = k/(r_b s); renorm=True folds
+        ``decoding.exact_decode_renorm`` in analytically: the renormed
+        one-step weight is ``w * k / sum(G w)`` and for w = rho*m the
+        rho cancels, leaving ``k / (m @ colsum(G))`` — with the same
+        tot <= 1e-6 skip rule (all-straggler rows keep the raw rho).
+        """
+        masks = decoding._as_masks(masks, self.n)
+        self.fused_calls += 1
+        rhos = self.rhos_for(masks)
+        if not renorm:
+            return rhos
+        denom = masks.astype(np.float64) @ self.code.G.sum(axis=0)
+        tot = rhos * denom
+        return np.where(tot > 1e-6, self.k / np.where(denom == 0, 1.0, denom),
+                        rhos)
+
+    def decode_apply_batch(self, masks: np.ndarray, messages: np.ndarray, *,
+                           renorm: bool = False,
+                           impl: Optional[str] = None) -> np.ndarray:
+        """One-step decode fused into the apply: [B, P] decoded grads.
+
+        Equivalent to ``decode_batch(masks, 'onestep').weights @
+        messages`` (with optional exact renorm) but in a single pass
+        over the [L, P] worker messages — no weight ensemble, no error
+        reduction.  ``impl`` overrides the kernel impl (defaults to the
+        engine backend; numpy computes in fp64 BLAS).
+        """
+        masks = decoding._as_masks(masks, self.n)
+        scales = self.onestep_scales(masks, renorm=renorm)
+        backend = self.backend if impl is None else impl
+        if backend == "numpy":
+            W = scales[:, None] * masks
+            return W @ np.asarray(messages, dtype=np.float64)
+        import jax.numpy as jnp
+
+        from ..kernels import ops
+        out = ops.fused_decode_apply(
+            jnp.asarray(np.asarray(messages, dtype=np.float32)),
+            jnp.asarray(masks), jnp.asarray(scales.astype(np.float32)),
+            impl=backend)
+        return np.asarray(out, dtype=np.float64)
 
     # ------------------------------------------------------------------
     # single-mask decode with LRU cache (training hot path)

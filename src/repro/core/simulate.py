@@ -127,8 +127,11 @@ def monte_carlo_error(
         code = fam.make(k=k, n=n, s=s, rng=rng)
         masks = sample_straggler_masks(n, num_straggle, chunk, rng)
         # nominal s, NOT inferred from G's density: the paper's
-        # rho = k/(r s) calibration uses the construction parameter
-        eng = DecodeEngine(code, backend=backend, iters=iters, s=s)
+        # rho = k/(r s) calibration uses the construction parameter.
+        # pinv keeps the MC error curves on the exact least-squares
+        # oracle (the golden pins predate the gram default).
+        eng = DecodeEngine(code, backend=backend, iters=iters, s=s,
+                           optimal_impl="pinv")
         errs[lo: lo + chunk] = eng.errors_batch(masks, decoder)
         lo += chunk
     errs = errs / k

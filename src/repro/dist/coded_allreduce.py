@@ -36,6 +36,15 @@ Two aggregation surfaces:
     (``kernels.coded_accumulate.coded_accumulate_batched``) and psum'd;
     ``sim.cluster.ClusterSim.run_distributed`` uses it to validate the
     E11 frontier errors against real multi-device execution.
+  * :meth:`CodedAllReduce.aggregate_messages_fused` — the pipelined hot
+    path.  For the one-step decoder the weights are rank-1 in the mask,
+    so the decode rides the accumulate (``kernels.fused_decode_apply``):
+    one pass over the worker messages, no weight ensemble.
+
+The mesh may be multi-axis: the worker axis (``axis_name``) is manual
+under shard_map while any remaining axes (data / model / FSDP) stay
+GSPMD-automatic, so the coded aggregation composes with tensor-sharded
+params (``sharding.make_coded_mesh`` builds such a mesh).
 """
 
 from __future__ import annotations
@@ -167,11 +176,21 @@ class CodedAllReduce:
         self.engine = engine if engine is not None else DecodeEngine(code)
         self.mesh = mesh if mesh is not None else make_worker_mesh(
             axis_name=axis_name)
-        if len(self.mesh.axis_names) != 1:
-            raise ValueError(f"CodedAllReduce needs a 1-D worker mesh, got "
-                             f"axes {self.mesh.axis_names}")
-        self.axis_name = self.mesh.axis_names[0]
-        self.partition = partition_workers(code.n, self.mesh.devices.size)
+        names = tuple(self.mesh.axis_names)
+        # the worker axis may compose with data/model/FSDP axes: manual
+        # over `axis_name`, GSPMD-automatic over everything else
+        if axis_name in names:
+            self.axis_name = axis_name
+        elif len(names) == 1:
+            self.axis_name = names[0]       # 1-D mesh: any axis name works
+        else:
+            raise ValueError(
+                f"mesh axes {names} do not include the worker axis "
+                f"{axis_name!r}; pass axis_name= to pick the coded axis of "
+                f"a multi-axis mesh")
+        self.auto_axes = frozenset(names) - {self.axis_name}
+        self.partition = partition_workers(
+            code.n, self.mesh.shape[self.axis_name])
 
     @classmethod
     def for_scheme(cls, scheme: str, n: int, *, s: int,
@@ -190,6 +209,17 @@ class CodedAllReduce:
     @property
     def n_devices(self) -> int:
         return self.partition.n_devices
+
+    def _shard_map(self, fn, *, in_specs, out_specs):
+        """shard_map manual over the worker axis only: any other mesh
+        axes (data/model/FSDP) stay automatic, so GSPMD keeps sharding
+        params and activations over them inside the worker-local body."""
+        kw = {"auto": self.auto_axes} if self.auto_axes else {}
+        out = shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False, **kw)
+        # partial-auto shard_map only lowers under jit (jax 0.4.37's
+        # eager impl rejects auto axes), so multi-axis meshes force it
+        return jax.jit(out) if self.auto_axes else out
 
     # ------------------------------------------------------------------
     # per-step decode weights
@@ -252,20 +282,21 @@ class CodedAllReduce:
         """
         ax = self.axis_name
         # devices holding at least one real worker participate in the
-        # additive-regularizer average; padding-only devices are masked
+        # additive-regularizer average; padding-only devices are masked.
+        # The flag rides in as a worker-sharded input rather than an
+        # axis_index lookup: partial-auto meshes can't lower PartitionId
         real_dev = self.partition.lane_mask.any(axis=1)     # [D] host-side
         n_real = max(int(real_dev.sum()), 1)
+        flag = jnp.asarray(real_dev.astype(np.float32))     # [D]
 
-        def local(params, dbatch):
+        def local(params, dbatch, flag_d):
             batch = jax.tree_util.tree_map(lambda x: x[0], dbatch)
             if has_aux:
                 def local_loss(p, b):
                     loss, aux = loss_fn(p, b)
                     base = aux.get("loss") if isinstance(aux, dict) else None
                     if base is not None:   # de-scale additive regularizers
-                        mine = jnp.asarray(real_dev, jnp.float32)[
-                            jax.lax.axis_index(ax)]
-                        loss = base + (loss - base) * mine / n_real
+                        loss = base + (loss - base) * flag_d[0] / n_real
                     return loss, aux
 
                 (loss, aux), grads = jax.value_and_grad(
@@ -278,9 +309,12 @@ class CodedAllReduce:
             aux = jax.tree_util.tree_map(lambda v: jax.lax.psum(v, ax), aux)
             return (loss, aux), grads
 
-        fn = shard_map(local, mesh=self.mesh,
-                       in_specs=(P(), P(self.axis_name)),
-                       out_specs=P(), check_rep=False)
+        inner = self._shard_map(local, in_specs=(P(), P(ax), P(ax)),
+                                out_specs=P())
+
+        def fn(params, dbatch):
+            return inner(params, dbatch, flag)
+
         return jax.jit(fn) if jit else fn
 
     def batch_sharding(self) -> NamedSharding:
@@ -334,9 +368,51 @@ class CodedAllReduce:
                 out = ops.coded_accumulate_batched(m, w, impl=impl)
             return jax.lax.psum(out, ax)
 
-        fn = shard_map(local, mesh=self.mesh, in_specs=(P(ax), P(ax)),
-                       out_specs=P(), check_rep=False)
+        fn = self._shard_map(local, in_specs=(P(ax), P(ax)), out_specs=P())
         return np.asarray(fn(jnp.asarray(msg), jnp.asarray(wts)))
+
+    def aggregate_messages_fused(self, messages: np.ndarray,
+                                 masks: np.ndarray, *, renorm: bool = True,
+                                 impl: str = "xla") -> np.ndarray:
+        """One-step decode fused into the device-local accumulate: [S, P].
+
+        Semantically ``aggregate_messages_batch(messages,
+        weights_for_masks(masks, 'onestep', renorm=renorm))`` but the
+        [S, n] weight ensemble is never materialized: the one-step
+        weights are rank-1 in the mask (w = scale * m, see
+        ``DecodeEngine.onestep_scales``), so each device contracts its
+        raw 0/1 mask lanes against the local messages in a single
+        ``kernels.fused_decode_apply`` pass and applies the per-step
+        scale at emission.  The psum over the worker axis completes the
+        decode.  Padding lanes scatter ``False`` masks -> exact zeros.
+        """
+        from ..kernels import ops
+
+        messages = np.asarray(messages)
+        masks = np.atleast_2d(np.asarray(masks, dtype=bool))
+        if messages.shape[0] != self.code.n or masks.shape[1] != self.code.n:
+            raise ValueError(
+                f"messages {messages.shape} / masks {masks.shape} do not "
+                f"match n={self.code.n}")
+        part = self.partition
+        scales = self.engine.onestep_scales(masks, renorm=renorm)
+        msg = part.scatter(messages)                     # [D, L, P]
+        mks = part.scatter(masks.T, fill=False)          # [D, L, S]
+        ax = self.axis_name
+        f64 = messages.dtype == np.float64 and jax.config.jax_enable_x64
+        sc = jnp.asarray(scales if f64 else scales.astype(np.float32))
+
+        def local(msg_d, m_d):
+            m = msg_d[0]                                 # [L, P]
+            mask_l = m_d[0].T                            # [S, L]
+            if f64:   # dtype-preserving reference path (fp64 differential)
+                out = (sc[:, None] * mask_l.astype(m.dtype)) @ m
+            else:
+                out = ops.fused_decode_apply(m, mask_l, sc, impl=impl)
+            return jax.lax.psum(out, ax)
+
+        fn = self._shard_map(local, in_specs=(P(ax), P(ax)), out_specs=P())
+        return np.asarray(fn(jnp.asarray(msg), jnp.asarray(mks)))
 
     def aggregate_messages(self, messages: np.ndarray, w: np.ndarray, *,
                            impl: str = "xla") -> np.ndarray:

@@ -34,7 +34,8 @@ import math
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
     "DEFAULT_RULES",
@@ -42,6 +43,7 @@ __all__ = [
     "active_rules",
     "constrain",
     "logical_to_pspec",
+    "make_coded_mesh",
     "param_pspec",
     "param_shardings",
     "rules_for",
@@ -91,6 +93,31 @@ def rules_for(cfg) -> Rules:
     if getattr(cfg, "batch_shard_model", False):
         return _BATCH_SHARD_MODEL_RULES
     return DEFAULT_RULES
+
+
+# --------------------------------------------------------------------------
+# mesh construction
+# --------------------------------------------------------------------------
+
+
+def make_coded_mesh(workers: int, *, devices=None,
+                    worker_axis: str = "workers",
+                    model_axis: str = "model"):
+    """2-D (workers × model) mesh composing coded aggregation with TP.
+
+    The leading axis carries the CodedAllReduce worker lanes (manual
+    under its shard_map); the trailing axis is left to GSPMD for
+    model / FSDP sharding via the logical-axis rules above.  `workers`
+    must divide the device count; the model axis gets the rest.  With
+    model size 1 this degenerates to the 1-D worker mesh (same device
+    order), so one entry point serves both layouts.
+    """
+    devs = jax.devices() if devices is None else list(devices)
+    if workers <= 0 or len(devs) % workers != 0:
+        raise ValueError(f"workers={workers} must divide the device count "
+                         f"{len(devs)}")
+    grid = np.asarray(devs).reshape(workers, len(devs) // workers)
+    return Mesh(grid, (worker_axis, model_axis))
 
 
 # --------------------------------------------------------------------------

@@ -26,13 +26,14 @@ from .coded_accumulate import (
     coded_accumulate_batched as _accumulate_batched_pallas,
 )
 from .flash_attention import flash_attention as _flash_pallas
+from .fused_decode_apply import fused_decode_apply as _fused_apply_pallas
 from .onestep_decode import onestep_decode as _onestep_pallas
 from .rglru_scan import rglru_scan as _rglru_pallas
 from .rwkv6_wkv import rwkv6_wkv as _wkv_pallas
 
 __all__ = [
     "attention", "rglru_scan", "rwkv6_wkv",
-    "coded_accumulate", "coded_accumulate_batched",
+    "coded_accumulate", "coded_accumulate_batched", "fused_decode_apply",
     "onestep_decode", "algorithmic_decode",
     "batched_onestep_decode", "batched_onestep_decode_ell",
     "batched_algorithmic_decode", "batched_masked_gram",
@@ -81,6 +82,17 @@ def coded_accumulate_batched(grads, weights, *, impl="pallas",
         return _ref.coded_accumulate_batched_ref(grads, weights)
     return _accumulate_batched_pallas(grads, weights, bb=bb, bk=bk, bp=bp,
                                       interpret=_interp(impl))
+
+
+def fused_decode_apply(messages, masks, scales, *, impl="pallas",
+                       bb=128, bl=512, bp=2048):
+    """out [B, P] = diag(scales) (masks [B, L] @ messages [L, P]) — the
+    one-step decode fused into the gradient accumulate: one pass over
+    the worker messages, no [B, L] weight ensemble materialized."""
+    if impl == "xla":
+        return _ref.fused_decode_apply_ref(messages, masks, scales)
+    return _fused_apply_pallas(messages, masks, scales, bb=bb, bl=bl, bp=bp,
+                               interpret=_interp(impl))
 
 
 def onestep_decode(G, mask, rho, *, impl="pallas", bk=512, bn=512):

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 __all__ = [
     "attention_ref", "rglru_scan_ref", "wkv_ref",
     "coded_accumulate_ref", "coded_accumulate_batched_ref",
+    "fused_decode_apply_ref",
     "onestep_decode_ref", "algorithmic_decode_ref",
     "batched_onestep_decode_ref", "batched_algorithmic_decode_ref",
 ]
@@ -105,6 +106,21 @@ def coded_accumulate_batched_ref(grads: jax.Array,
     dt = jnp.promote_types(jnp.promote_types(grads.dtype, weights.dtype),
                            jnp.float32)
     return jnp.einsum("bk,kp->bp", weights.astype(dt), grads.astype(dt))
+
+
+def fused_decode_apply_ref(messages: jax.Array, masks: jax.Array,
+                           scales: jax.Array) -> jax.Array:
+    """out[b] = scales[b] * (masks[b] @ messages): the one-step decode
+    folded into the accumulate.  messages [L, P], masks [B, L],
+    scales [B] -> [B, P].
+
+    Computes in fp32 like the kernel, but follows the inputs up to fp64
+    when x64 is enabled (the differential oracle path).
+    """
+    dt = jnp.promote_types(jnp.promote_types(messages.dtype, scales.dtype),
+                           jnp.float32)
+    w = scales.astype(dt)[:, None] * masks.astype(dt)
+    return w @ messages.astype(dt)
 
 
 def onestep_decode_ref(G: jax.Array, mask: jax.Array, rho: float) -> jax.Array:

@@ -21,6 +21,7 @@ from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
 
+from ..core import decoding
 from ..core import registry
 from ..core.codes import GradientCode
 from ..core.engine import DecodeEngine
@@ -242,7 +243,8 @@ class ClusterSim:
                  decoder: str = "onestep", backend: str = "numpy",
                  s: Optional[int] = None, iters: int = 8,
                  engine: Optional[DecodeEngine] = None,
-                 code_seed: int = 0, **policy_kw):
+                 code_seed: int = 0, staleness: int = 0,
+                 decode_cost: float = 0.0, **policy_kw):
         if isinstance(code, str):
             # scheme name -> registry build sized to the trace (k = n).
             # Validate against the REQUESTED family (a registered alias
@@ -267,10 +269,40 @@ class ClusterSim:
         self.decoder = decoder
         self.engine = engine if engine is not None else DecodeEngine(
             code, backend=backend, s=s, iters=iters)
+        if staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {staleness}")
+        # decode pipelining (docs/architecture.md §10): step t applies
+        # the weights decoded from step t-staleness's mask, re-masked by
+        # step t's stragglers; the decode overlaps the compute, so its
+        # cost leaves the critical path whenever decode_cost <= the
+        # policy's step time.  staleness=0 keeps the synchronous
+        # semantics with the decode cost ADDED to every step.
+        self.staleness = int(staleness)
+        self.decode_cost = float(decode_cost)
 
     def run(self) -> ClusterRunResult:
         masks, times, extras = self.policy.apply(self.trace.latencies)
-        errors = self.engine.errors_batch(masks, self.decoder) / self.code.k
+        if self.staleness == 0:
+            errors = self.engine.errors_batch(masks, self.decoder) \
+                / self.code.k
+            if self.decode_cost:
+                times = times + self.decode_cost   # synchronous barrier
+            return ClusterRunResult(
+                scheme=self.code.name, policy=self.policy.name,
+                decoder=self.decoder, step_times=times, masks=masks,
+                errors=errors, extras=extras)
+        # stale-weighted pipelining, still ONE decode_batch: prepend
+        # `staleness` all-alive warm-start rows so row t of the decoded
+        # ensemble is what step t applies (weights of mask t-staleness)
+        S, n = masks.shape
+        st = self.staleness
+        aug = np.vstack([np.ones((st, n), dtype=bool), masks])
+        W = self.engine.decode_batch(aug, self.decoder).weights
+        W_eff = W[:S] * masks                       # today's stragglers: 0
+        errors = decoding.err_batch(self.code.G, W_eff) / self.code.k
+        # the decode overlaps the next step's compute; it only stretches
+        # a step whose compute finishes before the decode does
+        times = np.maximum(times, self.decode_cost)
         return ClusterRunResult(
             scheme=self.code.name, policy=self.policy.name,
             decoder=self.decoder, step_times=times, masks=masks,
@@ -278,7 +310,8 @@ class ClusterSim:
 
     def run_distributed(self, *, steps: Optional[int] = None,
                         task_grads: Optional[np.ndarray] = None,
-                        mesh=None, impl: str = "xla") -> ClusterRunResult:
+                        mesh=None, impl: str = "xla",
+                        fused: bool = False) -> ClusterRunResult:
         """The co-simulation executed on REAL devices (docs/architecture.md §9).
 
         Same trace -> policy -> masks dataflow as :meth:`run`, but the
@@ -299,24 +332,41 @@ class ClusterSim:
         execution.  Run under
         ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a
         real 8-way mesh; a single device degenerates to lanes = n.
+
+        ``fused=True`` routes the aggregation through
+        ``CodedAllReduce.aggregate_messages_fused`` (one-step decoder
+        only): the decode weights are never materialized — each device
+        contracts its raw mask lanes against the local messages and the
+        per-step scale applies at emission.
         """
         from ..dist.coded_allreduce import CodedAllReduce
 
         lat = self.trace.latencies if steps is None \
             else self.trace.latencies[:steps]
         masks, times, extras = self.policy.apply(lat)
-        decoded_batch = self.engine.decode_batch(masks, self.decoder)
-        W = decoded_batch.weights
         if task_grads is None:
             task_grads = np.eye(self.code.k)
         task_grads = np.asarray(task_grads, dtype=np.float64)
         messages = self.code.G.T @ task_grads          # [n, P] worker msgs
         allreduce = CodedAllReduce(self.code, engine=self.engine, mesh=mesh)
-        decoded = allreduce.aggregate_messages_batch(messages, W, impl=impl)
+        if fused:
+            if self.decoder != "onestep":
+                raise ValueError("fused=True implements the one-step "
+                                 f"decoder; got decoder={self.decoder!r}")
+            decoded = allreduce.aggregate_messages_fused(
+                messages, masks, renorm=False, impl=impl)
+            scales = self.engine.onestep_scales(masks)
+            analytic = decoding.err_batch(
+                self.code.G, scales[:, None] * masks) / self.code.k
+        else:
+            decoded_batch = self.engine.decode_batch(masks, self.decoder)
+            decoded = allreduce.aggregate_messages_batch(
+                messages, decoded_batch.weights, impl=impl)
+            analytic = decoded_batch.errors / self.code.k
         full = task_grads.sum(axis=0)                  # the uncoded gradient
         dev_errors = ((decoded - full[None]) ** 2).sum(axis=1) / self.code.k
         extras = dict(extras,
-                      analytic_errors=decoded_batch.errors / self.code.k,
+                      analytic_errors=analytic,
                       decoded=decoded,
                       n_devices=allreduce.n_devices)
         return ClusterRunResult(

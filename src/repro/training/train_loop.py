@@ -31,6 +31,13 @@ rebuild path (code, assignment, pipeline, engine, allreduce, step_fn),
 system picks its own operating point on the paper's frontier
 (docs/adaptive.md).
 
+Pipelined decoding: ``staleness=1`` removes the per-step decode barrier —
+step t applies the weights decoded from step t-1's mask (re-masked by
+today's stragglers, whose messages never arrived) and today's decode is
+issued after the async step dispatch, overlapping the backprop.  Step 0
+warm-starts from an all-alive decode; elastic re-codes, ``set_s`` and
+``set_decoder`` flush the in-flight weights (docs/architecture.md §10).
+
 Distributed execution: ``dist_mode="coded_allreduce"`` replaces step 3-4
 with the shard_map path of ``dist.coded_allreduce`` (docs/architecture.md §9): the
 batch is sliced into per-device microbatches (each device computes only
@@ -86,6 +93,14 @@ class CodedTrainConfig:
     exact_decode_renorm: bool = True  # rescale w so sum(G@w)=k (unbiased-ish)
     decode_cache_size: int = 512      # mask->weights LRU entries (engine)
     dist_mode: str = "fused"          # fused | coded_allreduce (docs/architecture.md §9)
+    optimal_impl: str = "auto"        # least-squares strategy (engine):
+    #   auto/gram = masked-Gram normal equations (fast default);
+    #   pinv = exact min-norm pinv, the exact-oracle opt-in
+    staleness: int = 0                # decode pipelining depth: step t
+    #   applies weights decoded from step t-staleness's mask (masked by
+    #   today's stragglers), overlapping decode with backprop.  0 =
+    #   synchronous.  Stale weights flush on elastic re-code / set_s /
+    #   set_decoder (docs/architecture.md §10).
 
 
 class CodedTrainer:
@@ -108,8 +123,15 @@ class CodedTrainer:
             raise ValueError(f"dist_mode {tcfg.dist_mode!r} not in "
                              f"('fused', 'coded_allreduce')")
         if tcfg.dist_mode == "coded_allreduce" and mesh is not None:
-            raise ValueError("dist_mode='coded_allreduce' builds its own 1-D "
-                             "worker mesh; mesh= is only for the fused path")
+            from ..dist.coded_allreduce import WORKER_AXIS
+            if WORKER_AXIS not in getattr(mesh, "axis_names", ()):
+                raise ValueError(
+                    "dist_mode='coded_allreduce' with mesh= needs a mesh "
+                    f"carrying the {WORKER_AXIS!r} axis (see "
+                    "dist.sharding.make_coded_mesh); got axes "
+                    f"{tuple(getattr(mesh, 'axis_names', ()))}")
+        if tcfg.staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {tcfg.staleness}")
         self.rng = np.random.default_rng(tcfg.seed)
         # trace-driven co-simulation (sim.cluster): trace rows -> masks +
         # modelled step times through a sync policy
@@ -138,6 +160,9 @@ class CodedTrainer:
         self._build_code(tcfg.n_workers)
         self._step_fn = self._make_step_fn()
         self.history: list = []
+        # per-step applied decode weights (the staleness tests assert
+        # the staleness=0 stream is bitwise the synchronous stream)
+        self.weight_log: list = []
 
     def _mask_and_time(self, step: int, n: int):
         """(mask, modelled step time | None) — trace-driven when a trace
@@ -167,7 +192,8 @@ class CodedTrainer:
         # one engine per live code; rebuilt (cache and all) on elastic
         # re-coding since the weights are a function of G
         self.engine = DecodeEngine(self.code, iters=t.decoder_iters,
-                                   cache_size=t.decode_cache_size)
+                                   cache_size=t.decode_cache_size,
+                                   optimal_impl=t.optimal_impl)
         self.assignment = ASG.build_assignment(self.code)
         self.pipeline = CodedDataPipeline(
             self.assignment,
@@ -175,10 +201,16 @@ class CodedTrainer:
                            rows_per_slot=t.rows_per_slot, seed=t.seed))
         self.allreduce = None
         self._trace_masks = self._trace_times = self._trace_weights = None
+        # elastic re-code invalidation: weights decoded against the OLD
+        # G are meaningless for the new code — drop the whole pipeline
+        # (the next step warm-starts from an all-alive decode)
+        self._pending_w = None
         if t.dist_mode == "coded_allreduce":
             from ..dist.coded_allreduce import CodedAllReduce
+            kw = {"mesh": self.mesh} if self.mesh is not None else {}
             self.allreduce = CodedAllReduce(
-                self.code, engine=self.engine, assignment=self.assignment)
+                self.code, engine=self.engine, assignment=self.assignment,
+                **kw)
             if self.trace is not None:
                 self._prepare_trace_schedule()
 
@@ -220,6 +252,7 @@ class CodedTrainer:
             decoder = str(action.value)
             REG.get(t.code).require_decoder(decoder)
             self.tcfg = dataclasses.replace(t, decoder=decoder)
+            self._pending_w = None   # in-flight weights used the old decoder
             if self._trace_masks is not None:
                 self._prepare_trace_schedule()
             return
@@ -341,10 +374,24 @@ class CodedTrainer:
 
                 # --- straggler mask -> decode weights -> coded batch ---
                 mask, step_time = self._mask_and_time(step, self.assignment.n)
-                if self._trace_weights is not None:
+                deferred = None
+                if t.staleness > 0:
+                    # pipelined: apply weights decoded `staleness` steps
+                    # ago, re-masked by TODAY's stragglers (their
+                    # messages never arrived); today's decode is issued
+                    # after the jitted step dispatch so it overlaps the
+                    # backprop (docs/architecture.md §10)
+                    if self._pending_w is None:   # warm start / post-flush
+                        ones = np.ones(self.assignment.n, dtype=bool)
+                        self._pending_w = [self.decode_weights_for(ones)
+                                           ] * t.staleness
+                    w = self._pending_w.pop(0) * mask
+                    deferred = mask
+                elif self._trace_weights is not None:
                     w = self._trace_weights[step % self._trace_weights.shape[0]]
                 else:
                     w = self.decode_weights_for(mask)
+                self.weight_log.append(np.array(w))
 
                 if self.controller is not None:
                     # realized decode error of the weights in effect —
@@ -367,6 +414,18 @@ class CodedTrainer:
 
                 state["params"], state["opt"], metrics = self._step_fn(
                     state["params"], state["opt"], batch)
+
+                if deferred is not None:
+                    # decode of step t's own mask, issued while the step
+                    # above executes asynchronously — consumed at t+st.
+                    # The trace-schedule path reuses its precomputed row
+                    # (still ONE decode_batch per trace)
+                    if self._trace_weights is not None:
+                        S = self._trace_weights.shape[0]
+                        self._pending_w.append(self._trace_weights[step % S])
+                    else:
+                        self._pending_w.append(
+                            self.decode_weights_for(deferred))
 
                 if step % max(t.log_every, 1) == 0 or step == start_step + steps - 1:
                     # read the LIVE config: controller actions may have

@@ -169,6 +169,31 @@ def test_coded_accumulate_batched_interpret_matches_ref(k, P, B):
     np.testing.assert_allclose(ref, w @ g, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("L,P,B", [(8, 64, 4), (13, 37, 9), (1, 9, 1)])
+def test_fused_decode_apply_interpret_matches_ref(L, P, B):
+    """The fused decode-apply kernel (interpret mode) == the xla
+    reference AND the two-pass composition it replaces (materialize
+    weights = scales * masks, then coded_accumulate_batched)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(L * 100 + P)
+    msgs = rng.normal(size=(L, P)).astype(np.float32)
+    masks = rng.random((B, L)) < 0.7
+    scales = rng.normal(size=B).astype(np.float32)
+    ref = np.asarray(ops.fused_decode_apply(
+        jnp.asarray(msgs), jnp.asarray(masks), jnp.asarray(scales),
+        impl="xla"))
+    got = np.asarray(ops.fused_decode_apply(
+        jnp.asarray(msgs), jnp.asarray(masks), jnp.asarray(scales),
+        impl="pallas_interpret"))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    W = (scales[:, None] * masks).astype(np.float32)
+    comp = np.asarray(ops.coded_accumulate_batched(
+        jnp.asarray(msgs), jnp.asarray(W), impl="xla"))
+    np.testing.assert_allclose(ref, comp, rtol=1e-5, atol=1e-5)
+
+
 # ==========================================================================
 # aggregation on the live mesh (1 device locally, 8 in the CI lane)
 # ==========================================================================
@@ -187,6 +212,29 @@ def test_aggregate_messages_matches_numpy(decoder):
     out = ar.aggregate_messages_batch(msgs, W)
     np.testing.assert_allclose(out, W @ msgs, rtol=1e-5, atol=1e-6)
     assert engine.batch_calls == 1   # the whole ensemble, one decode
+
+
+@pytest.mark.parametrize("renorm", [False, True])
+def test_aggregate_messages_fused_matches_weights_then_psum(renorm):
+    """Fused one-step aggregation == the weights-then-psum composition
+    on the live mesh — without materializing the [S, n] weight ensemble
+    and without spending a decode_batch call."""
+    rng = np.random.default_rng(9)
+    code = CODES.bgc(k=12, n=12, s=4, rng=rng)
+    engine = DecodeEngine(code)
+    ar = CodedAllReduce(code, engine=engine)
+    masks = rng.random((5, 12)) < 0.75
+    masks[0] = True                        # no stragglers
+    masks[1] = False                       # all stragglers -> exact zeros
+    msgs = rng.normal(size=(12, 24))
+    W = ar.weights_for_masks(masks, "onestep", renorm=renorm)
+    want = np.asarray(ar.aggregate_messages_batch(msgs, W))
+    got = np.asarray(ar.aggregate_messages_fused(msgs, masks,
+                                                 renorm=renorm))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    assert np.all(got[1] == 0)             # dead row decodes to exact 0
+    assert engine.fused_calls == 1         # scales only on the fused path
+    assert engine.batch_calls == 1         # just the W reference above
 
 
 def test_weights_for_masks_matches_engine_decode():
@@ -399,6 +447,112 @@ def test_differential_all_alive_equals_uncoded_gradient_fp64():
     for c in res:
         assert c["exact"] < 1e-9, c            # the decode really is exact
         assert c["absdiff"] < 1e-10 * max(c["scale"], 1.0) + 1e-12, c
+
+
+def test_differential_fused_aggregation_vs_weights_then_psum_fp64():
+    """Fused decode-apply aggregation == the weights-then-psum
+    composition AND the host oracle W @ msgs to 1e-10, fp64 on a real
+    8-device worker mesh with 2 lanes per device, renorm on and off.
+    The fused path spends onestep_scales calls, never decode_batch."""
+    res = _run_subprocess(body="""
+        from repro.core import codes as CODES
+        from repro.core.engine import DecodeEngine
+        from repro.dist.coded_allreduce import CodedAllReduce
+
+        rng = np.random.default_rng(17)
+        code = CODES.bgc(k=16, n=16, s=4, rng=rng)
+        engine = DecodeEngine(code)
+        ar = CodedAllReduce(code, engine=engine)
+        masks = rng.random((6, 16)) < 0.75
+        masks[0] = True
+        masks[1] = False
+        msgs = rng.normal(size=(16, 48))          # fp64 under x64
+        cells = []
+        for renorm in (False, True):
+            W = ar.weights_for_masks(masks, "onestep", renorm=renorm)
+            ref = W @ msgs
+            psum = np.asarray(ar.aggregate_messages_batch(msgs, W))
+            fused = np.asarray(ar.aggregate_messages_fused(
+                msgs, masks, renorm=renorm))
+            cells.append({
+                "renorm": renorm,
+                "psum": float(np.abs(psum - ref).max()),
+                "fused": float(np.abs(fused - ref).max()),
+                "scale": float(np.abs(ref).max())})
+        print("RESULT:" + json.dumps({
+            "n_devices": jax.device_count(),
+            "lanes": ar.partition.lanes, "cells": cells,
+            "fused_calls": engine.fused_calls,
+            "batch_calls": engine.batch_calls}))
+    """)
+    assert res["n_devices"] == 8 and res["lanes"] == 2
+    assert res["fused_calls"] == 2        # one onestep_scales per fused call
+    assert res["batch_calls"] == 2        # only the W references decoded
+    for c in res["cells"]:
+        tol = 1e-10 * max(c["scale"], 1.0) + 1e-12
+        assert c["psum"] < tol, c
+        assert c["fused"] < tol, c
+
+
+def test_differential_2d_mesh_vs_worker_mesh_fp64():
+    """CodedAllReduce on a workers x model mesh (4 x 2 over 8 devices)
+    matches the host oracle to 1e-10 fp64 on the message path, the
+    fused path, AND the value_and_grad gradient path (vs
+    explicit_master_decode_grads) — the worker axis composes with an
+    automatic model axis instead of owning the whole mesh."""
+    res = _run_subprocess(prelude=_TOY_MODEL, body="""
+        from repro.core import codes as CODES
+        from repro.core.engine import DecodeEngine
+        from repro.dist.coded_allreduce import CodedAllReduce
+        from repro.dist.sharding import make_coded_mesh
+        from repro.training import CodedTrainConfig, CodedTrainer
+        from repro.training.train_loop import explicit_master_decode_grads
+
+        mesh2d = make_coded_mesh(4)               # 4 workers x 2 model
+        assert dict(mesh2d.shape) == {"workers": 4, "model": 2}
+
+        rng = np.random.default_rng(23)
+        code = CODES.bgc(k=8, n=8, s=2, rng=rng)
+        ar2 = CodedAllReduce(code, engine=DecodeEngine(code), mesh=mesh2d)
+        assert ar2.n_devices == 4                 # worker-axis extent only
+        masks = rng.random((5, 8)) < 0.7
+        masks[0] = True
+        msgs = rng.normal(size=(8, 40))
+        W = ar2.weights_for_masks(masks, "optimal", renorm=False)
+        agg = float(np.abs(np.asarray(
+            ar2.aggregate_messages_batch(msgs, W)) - W @ msgs).max())
+        Wf = ar2.weights_for_masks(masks, "onestep", renorm=True)
+        fus = float(np.abs(np.asarray(ar2.aggregate_messages_fused(
+            msgs, masks, renorm=True)) - Wf @ msgs).max())
+        mscale = float(max(np.abs(W @ msgs).max(),
+                           np.abs(Wf @ msgs).max()))
+
+        # gradient path: trainer pinned to the 2-D mesh vs the oracle
+        model = ToyModel()
+        tr = CodedTrainer(model, CodedTrainConfig(
+            code="frc", n_workers=4, s=2, decoder="onestep",
+            rows_per_slot=1, seq_len=16, seed=0,
+            dist_mode="coded_allreduce"), mesh=mesh2d)
+        params = model.init(jax.random.PRNGKey(0))
+        mask = np.array([True, False, True, True])
+        oracle, w = explicit_master_decode_grads(model, params, tr, 0,
+                                                 mask)
+        db = tr.pipeline.device_batch_for_step(0, w,
+                                               tr.allreduce.partition)
+        vg = tr.allreduce.value_and_grad(model.loss_fn)
+        (loss, aux), grads = vg(params, tr.allreduce.shard_batch(db))
+        gdiff = float(np.abs(flat(grads) - np.asarray(oracle)).max())
+        gscale = float(np.abs(np.asarray(oracle)).max())
+        print("RESULT:" + json.dumps({
+            "n_devices": jax.device_count(), "agg": agg, "fused": fus,
+            "mscale": mscale, "gdiff": gdiff, "gscale": gscale,
+            "loss_finite": bool(np.isfinite(float(loss)))}))
+    """)
+    assert res["n_devices"] == 8
+    assert res["agg"] < 1e-10 * max(res["mscale"], 1.0) + 1e-12
+    assert res["fused"] < 1e-10 * max(res["mscale"], 1.0) + 1e-12
+    assert res["gdiff"] < 1e-10 * max(res["gscale"], 1.0) + 1e-12
+    assert res["loss_finite"]
 
 
 def test_adaptive_recode_metrics_match_fused_fp64():

@@ -191,7 +191,8 @@ def test_batched_decode_matches_scalar_per_declared_decoder(fam):
     masks = rng.random((8, n)) < 0.7
     masks[0] = True                         # no stragglers
     masks[1] = False                        # all stragglers
-    eng = DecodeEngine(code, iters=4)
+    # pinv opt-in: the scalar decoding.* oracles ARE the pinv path
+    eng = DecodeEngine(code, iters=4, optimal_impl="pinv")
     for decoder in fam.decoders:
         res = eng.decode_batch(masks, decoder)
         assert res.weights.shape == (8, n)
@@ -210,7 +211,8 @@ def test_gram_optimal_errors_match_pinv(fam_name):
     code = fam.make(k=26, n=26, s=4, seed=6)
     rng = np.random.default_rng(7)
     masks = rng.random((12, 26)) < 0.6
-    r_pinv = DecodeEngine(code).decode_batch(masks, "optimal")
+    r_pinv = DecodeEngine(code, optimal_impl="pinv").decode_batch(
+        masks, "optimal")
     r_gram = DecodeEngine(code, optimal_impl="gram").decode_batch(
         masks, "optimal")
     assert_allclose(r_gram.errors, r_pinv.errors, atol=1e-6, rtol=1e-6)

@@ -182,6 +182,55 @@ def test_clustersim_trace_code_mismatch_raises():
         ClusterSim(code, _trace(n=32), "sync")
 
 
+# --------------------- staleness pipelining (docs §10) ----------------------
+
+def test_clustersim_staleness_zero_is_synchronous():
+    """staleness=0 keeps the synchronous semantics bit-for-bit, and a
+    synchronous decode cost is a barrier every step pays."""
+    code = C.make_code("bgc", k=24, n=24, s=4, rng=np.random.default_rng(3))
+    tr = _trace(steps=40, n=24, seed=7)
+    base = ClusterSim(code, tr, "deadline", s=4).run()
+    same = ClusterSim(code, tr, "deadline", s=4, staleness=0).run()
+    np.testing.assert_array_equal(same.errors, base.errors)
+    np.testing.assert_array_equal(same.step_times, base.step_times)
+    cost = ClusterSim(code, tr, "deadline", s=4, decode_cost=0.25).run()
+    np.testing.assert_allclose(cost.step_times, base.step_times + 0.25)
+
+
+def test_clustersim_staleness_one_semantics():
+    """Step t applies the weights decoded from step t-1's mask, re-masked
+    by step t's stragglers; step 0 warm-starts from an all-alive decode.
+    Still exactly ONE batched decode per run."""
+    code = C.make_code("bgc", k=20, n=20, s=4, rng=np.random.default_rng(4))
+    tr = _trace(steps=30, n=20, seed=9)
+    sim = ClusterSim(code, tr, DeadlinePolicy(1.6), s=4, staleness=1)
+    assert sim.engine.batch_calls == 0
+    res = sim.run()
+    assert sim.engine.batch_calls == 1
+    masks, _, _ = DeadlinePolicy(1.6).apply(tr.latencies)
+    eng = ClusterSim(code, tr, DeadlinePolicy(1.6), s=4).engine
+    for t in (0, 1, 17, 29):
+        prev = np.ones(20, bool) if t == 0 else masks[t - 1]
+        w = eng.decode_batch(prev[None], "onestep").weights[0] * masks[t]
+        want = float(D.err_batch(code.G, w[None])[0]) / code.k
+        assert res.errors[t] == pytest.approx(want, rel=1e-10, abs=1e-12)
+
+
+def test_clustersim_staleness_overlap_hides_decode_cost():
+    """With pipelining the decode leaves the critical path: each step
+    costs max(compute, decode) instead of compute + decode."""
+    code = C.make_code("bgc", k=16, n=16, s=4, rng=np.random.default_rng(5))
+    tr = _trace(steps=25, n=16, seed=11)
+    sync = ClusterSim(code, tr, "deadline", s=4, decode_cost=0.5).run()
+    pipe = ClusterSim(code, tr, "deadline", s=4, decode_cost=0.5,
+                      staleness=1).run()
+    np.testing.assert_allclose(pipe.step_times,
+                               np.maximum(sync.step_times - 0.5, 0.5))
+    assert pipe.total_time < sync.total_time
+    with pytest.raises(ValueError):
+        ClusterSim(code, tr, "deadline", s=4, staleness=-1)
+
+
 # ------------------------------ frontier ------------------------------------
 
 def test_sweep_frontier_grid_and_pareto():
