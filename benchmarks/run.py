@@ -12,6 +12,7 @@ Runs, in order (E-numbers from docs/architecture.md §4):
     E9     roofline_report   roofline table from the dry-run artifacts
     E10    mc_throughput     looped vs batched Monte-Carlo decode
     E11    wallclock_frontier  ClusterSim runtime-vs-accuracy frontier
+    E12    serving_tail      hedged-serving p99/p999 vs compute overhead
 
 Artifacts land in artifacts/bench/ (+ artifacts/roofline.{json,md});
 each module prints PASS/MISMATCH against the paper's claims.
@@ -38,7 +39,8 @@ def main(argv=None) -> int:
 
     from . import adversary_bench, decoding_cost, e2e_convergence, \
         fig5_algorithmic, fig_errors, theory_check
-    from . import mc_throughput, roofline_report, wallclock_frontier
+    from . import mc_throughput, roofline_report, serving_tail, \
+        wallclock_frontier
 
     jobs = [
         ("fig_errors", lambda: fig_errors.main(["--trials", str(trials)])),
@@ -55,6 +57,9 @@ def main(argv=None) -> int:
         ("wallclock_frontier",
          lambda: wallclock_frontier.main(
              ["--steps", str(max(trials // 2, 100))])),
+        # E12 is vectorized numpy replay: the >= 1M-request gate stays
+        # full-scale even under --quick (seconds, no device execution)
+        ("serving_tail", lambda: serving_tail.main([])),
         ("roofline_report", lambda: roofline_report.main([])),
     ]
     if args.only:

@@ -131,14 +131,24 @@ def attn_block_apply(
     x: jax.Array,
     cfg: ArchConfig,
     *,
-    positions: jax.Array,            # [S] absolute positions of x
+    positions: jax.Array,            # [S] absolute positions of x, or
+                                     # [B, S] per-row (ragged serving)
     causal: bool = True,
     window: int = 0,
     cache: Optional[dict] = None,
     use_moe: bool = False,
+    seq_mask: Optional[jax.Array] = None,  # [B, S] bool: True = real token
 ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
-    """Pre-norm residual block. Returns (y, new_cache, aux_loss)."""
+    """Pre-norm residual block. Returns (y, new_cache, aux_loss).
+
+    With ``seq_mask`` (masked ragged prefill) or 2-D ``positions``
+    (decode after one), pad/invalid keys carry negative positions: they
+    are excluded from attention and land in unused ring slots whose
+    ``kpos`` stays < 0 — the same "empty" convention the ring cache
+    already uses — so later decode steps never attend to them.
+    """
     B, S, _ = x.shape
+    ragged = positions.ndim == 2
     h = norm(x, params["ln1"], cfg.norm, io=cfg.norm_io)
     q, k, v = _project_qkv(params["attn"], h, cfg)
     if cfg.rope_theta > 0:
@@ -148,10 +158,30 @@ def attn_block_apply(
     k = constrain(k, "batch", None, "act_kv", None)
 
     if cache is None:
-        out = attention(q, k, v, causal=causal, window=window,
-                        softcap=cfg.logit_softcap, q_offset=positions[0],
-                        impl=cfg.attn_impl)
+        if ragged or seq_mask is not None:
+            out = attention(q, k, v, causal=causal, window=window,
+                            softcap=cfg.logit_softcap, qpos=positions,
+                            kpos=positions, kv_valid=seq_mask,
+                            impl=cfg.attn_impl)
+        else:
+            out = attention(q, k, v, causal=causal, window=window,
+                            softcap=cfg.logit_softcap, q_offset=positions[0],
+                            impl=cfg.attn_impl)
         new_cache = None
+    elif S == 1 and ragged:
+        # per-row cached decode (after a masked ragged prefill): each row
+        # inserts at its own position; kpos is per-row [B, W]
+        W = cache["k"].shape[1]
+        bidx = jnp.arange(B)
+        slot = (positions[:, 0] % W).astype(jnp.int32)
+        ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        kpos = jnp.broadcast_to(cache["kpos"], (B, W))
+        kpos = kpos.at[bidx, slot].set(positions[:, 0].astype(jnp.int32))
+        out = attention(q, ck, cv, causal=causal, window=window,
+                        softcap=cfg.logit_softcap, qpos=positions,
+                        kpos=kpos, kv_valid=kpos >= 0, impl="xla_naive")
+        new_cache = {"k": ck, "v": cv, "kpos": kpos}
     elif S == 1:  # cached decode: ring-buffer insert + attend over buffer
         W = cache["k"].shape[1]
         slot = positions % W
@@ -161,6 +191,25 @@ def attn_block_apply(
         out = attention(q, ck, cv, causal=causal, window=window,
                         softcap=cfg.logit_softcap, q_offset=positions[0],
                         kpos=kpos, kv_valid=kpos >= 0, impl="xla_naive")
+        new_cache = {"k": ck, "v": cv, "kpos": kpos}
+    elif ragged or seq_mask is not None:
+        # masked ragged prefill: full attention over valid keys only,
+        # then per-row tail write (pads keep kpos < 0 = invalid slots)
+        out = attention(q, k, v, causal=causal, window=window,
+                        softcap=cfg.logit_softcap, qpos=positions,
+                        kpos=positions, kv_valid=seq_mask,
+                        impl=cfg.attn_impl)
+        W = cache["k"].shape[1]
+        take = min(W, S)
+        pos_tail = positions[:, -take:].astype(jnp.int32)   # [B, take]
+        slot = pos_tail % W
+        bidx = jnp.arange(B)[:, None]
+        ck = cache["k"].at[bidx, slot].set(
+            k[:, -take:].astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, slot].set(
+            v[:, -take:].astype(cache["v"].dtype))
+        kpos = jnp.broadcast_to(cache["kpos"], (B, W))
+        kpos = kpos.at[bidx, slot].set(pos_tail)
         new_cache = {"k": ck, "v": cv, "kpos": kpos}
     else:  # prefill: full attention, then write the tail into the cache
         out = attention(q, k, v, causal=causal, window=window,

@@ -103,14 +103,21 @@ def mlp(x: jax.Array, params: dict, act: str) -> jax.Array:
 
 def _mask_bias(qpos: jax.Array, kpos: jax.Array, causal: bool, window: int,
                kv_valid: Optional[jax.Array] = None) -> jax.Array:
-    """[..., Sq, Sk] additive mask bias."""
-    ok = jnp.ones(qpos.shape[-1:] + kpos.shape[-1:], dtype=bool)
+    """[..., Sq, Sk] additive mask bias.
+
+    ``qpos`` [..., Sq], ``kpos`` [..., Sk] and ``kv_valid`` [..., Sk] may
+    each carry leading batch dims (per-row positions/validity for ragged
+    left-padded serving batches); they broadcast together.
+    """
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), dtype=bool)
     if causal:
-        ok &= qpos[:, None] >= kpos[None, :]
+        ok &= q >= k
     if window > 0:
-        ok &= qpos[:, None] - kpos[None, :] < window
+        ok &= q - k < window
     if kv_valid is not None:
-        ok &= kv_valid[None, :]
+        ok = ok & kv_valid[..., None, :]
     return jnp.where(ok, 0.0, _NEG_INF).astype(jnp.float32)
 
 
@@ -129,8 +136,12 @@ def attention(
     window: int = 0,
     softcap: float = 0.0,
     q_offset=0,                   # int or scalar array: absolute pos of q[0]
-    kpos: Optional[jax.Array] = None,   # [Sk] absolute key positions (ring caches)
-    kv_valid: Optional[jax.Array] = None,  # [Sk] bool validity (ring caches)
+    qpos: Optional[jax.Array] = None,   # [Sq] or [B, Sq] absolute q positions
+                                        # (overrides q_offset; per-row for
+                                        # ragged left-padded batches)
+    kpos: Optional[jax.Array] = None,   # [Sk] or [B, Sk] absolute key
+                                        # positions (ring caches)
+    kv_valid: Optional[jax.Array] = None,  # [Sk] or [B, Sk] bool validity
     impl: str = "xla_naive",
     q_block: int = 512,
     kv_block: int = 1024,
@@ -140,12 +151,13 @@ def attention(
     Kv = k.shape[2]
     G = H // Kv
     if impl in ("pallas", "pallas_interpret") and kpos is None \
-            and kv_valid is None:
+            and kv_valid is None and qpos is None:
         from ..kernels import ops as _kops  # late import: no cycle
         return _kops.attention(q, k, v, causal=causal, window=window,
                                softcap=softcap, q_offset=q_offset, impl=impl)
     qg = q.reshape(B, Sq, Kv, G, dh)
-    if impl == "xla_chunked" and Sq > q_block:
+    if impl == "xla_chunked" and Sq > q_block and qpos is None \
+            and kv_valid is None:
         out = chunked_attention(qg, k, v, causal=causal, window=window,
                                 softcap=softcap, q_offset=q_offset,
                                 q_block=q_block, kv_block=kv_block)
@@ -155,10 +167,14 @@ def attention(
     scores = _gqa_scores(qg, k, scale)  # [B,Kv,G,Sq,Sk]
     if softcap > 0.0:
         scores = jnp.tanh(scores / softcap) * softcap
-    qpos = q_offset + jnp.arange(Sq)
+    if qpos is None:
+        qpos = q_offset + jnp.arange(Sq)
     if kpos is None:
         kpos = jnp.arange(k.shape[1])
-    scores = scores + _mask_bias(qpos, kpos, causal, window, kv_valid)
+    bias = _mask_bias(qpos, kpos, causal, window, kv_valid)
+    if bias.ndim == 3:  # [B, Sq, Sk] per-row bias -> [B, 1, 1, Sq, Sk]
+        bias = bias[:, None, None]
+    scores = scores + bias
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     out = jnp.einsum("bngqk,bknd->bqngd", probs, v)
     return out.reshape(B, Sq, H, dh)

@@ -142,13 +142,20 @@ def lm_cache_axes(cfg: ArchConfig) -> dict:
 
 # ------------------------- block dispatch -----------------------------------
 
-def _apply_block(kind: str, params, x, cfg: ArchConfig, positions, cache):
+def _apply_block(kind: str, params, x, cfg: ArchConfig, positions, cache,
+                 seq_mask=None):
     if kind == "attn":
         window = cfg.local_window
         y, c, aux = B.attn_block_apply(
             params, x, cfg, positions=positions, causal=True, window=window,
-            cache=cache, use_moe=cfg.moe is not None)
+            cache=cache, use_moe=cfg.moe is not None, seq_mask=seq_mask)
         return y, c, aux
+    if seq_mask is not None or positions.ndim == 2:
+        # recurrent state would absorb pad tokens; the serving engine
+        # routes such archs through exact-length per-request prefill
+        raise NotImplementedError(
+            f"masked ragged prefill/decode supports attention blocks "
+            f"only; got a {kind!r} block (see Model.supports_masked_prefill)")
     if kind == "rec":
         y, c = R.rec_block_apply(params, x, cfg, cache=cache)
         return y, c, jnp.zeros((), jnp.float32)
@@ -180,7 +187,8 @@ def _embed_inputs(params, cfg: ArchConfig, batch: dict) -> jax.Array:
     return constrain(x, "batch", "seq", "embed")
 
 
-def _run_blocks(params, cfg: ArchConfig, x, positions, caches=None):
+def _run_blocks(params, cfg: ArchConfig, x, positions, caches=None,
+                seq_mask=None):
     """Shared trunk: scan pattern groups + unrolled remainder.
 
     Returns (x, aux_sum, new_caches or None)."""
@@ -201,7 +209,7 @@ def _run_blocks(params, cfg: ArchConfig, x, positions, caches=None):
                 for i, kind in enumerate(pat):
                     x, c_out, aux = _apply_block(
                         kind, p_slice[f"p{i}"], x, cfg, positions,
-                        c_slice[f"p{i}"])
+                        c_slice[f"p{i}"], seq_mask)
                     new_c[f"p{i}"] = c_out
                     aux_g = aux_g + aux
                 return x, (aux_g, new_c)
@@ -214,7 +222,7 @@ def _run_blocks(params, cfg: ArchConfig, x, positions, caches=None):
                 aux_g = jnp.zeros((), jnp.float32)
                 for i, kind in enumerate(pat):
                     x, _, aux = _apply_block(kind, p_slice[f"p{i}"], x, cfg,
-                                             positions, None)
+                                             positions, None, seq_mask)
                     aux_g = aux_g + aux
                 return x, aux_g
 
@@ -228,11 +236,13 @@ def _run_blocks(params, cfg: ArchConfig, x, positions, caches=None):
                 if decode:
                     x, c_out, aux = _apply_block(kind, p_blk, x, cfg,
                                                  positions,
-                                                 caches["unrolled"][key])
+                                                 caches["unrolled"][key],
+                                                 seq_mask)
                     new_caches.setdefault("unrolled", {})[key] = c_out
                 else:
                     def blk_fn(p, x, kind=kind):
-                        y, _, aux = _apply_block(kind, p, x, cfg, positions, None)
+                        y, _, aux = _apply_block(kind, p, x, cfg, positions,
+                                                 None, seq_mask)
                         return y, aux
                     fn = _remat(blk_fn, cfg) if cfg.remat != "none" else blk_fn
                     x, aux = fn(p_blk, x)
@@ -243,7 +253,7 @@ def _run_blocks(params, cfg: ArchConfig, x, positions, caches=None):
         key = f"r{i}"
         c_in = caches["rem"][key] if decode else None
         x, c_out, aux = _apply_block(kind, params["rem"][key], x, cfg,
-                                     positions, c_in)
+                                     positions, c_in, seq_mask)
         if decode:
             new_caches.setdefault("rem", {})[key] = c_out
         aux_total = aux_total + aux
@@ -335,24 +345,51 @@ def lm_loss(params, cfg: ArchConfig, batch: dict) -> Tuple[jax.Array, dict]:
 
 def lm_prefill(params, cfg: ArchConfig, batch: dict, cache_len: int
                ) -> Tuple[jax.Array, dict]:
-    """Process a prompt, returning (last-token logits, filled caches)."""
+    """Process a prompt, returning (last-token logits, filled caches).
+
+    ``batch["length_mask"]`` ([B, S] bool, True = real token) enables
+    ragged LEFT-padded prompts: row i's real tokens sit right-aligned at
+    ``tokens[i, S-len_i:]``.  Real tokens get per-row positions
+    ``0..len_i-1`` (so RoPE and causal masking match an unpadded
+    per-request prefill exactly), pads get distinct negative positions
+    and are excluded from attention; the filled cache carries per-row
+    ``pos`` [B] and per-row key validity, so subsequent decode steps are
+    also per-row.  Attention-block archs only (recurrent state has no
+    pad-skip; see Model.supports_masked_prefill).
+    """
     cdt = jnp.dtype(cfg.compute_dtype)
     params = jax.tree_util.tree_map(
         lambda p: p.astype(cdt) if p.dtype == jnp.float32 and p.ndim >= 2 else p,
         params)
     x = _embed_inputs(params, cfg, batch)
     Bsz, S = x.shape[0], x.shape[1]
-    positions = jnp.arange(S)
+    mask = batch.get("length_mask")
     caches = init_lm_cache(cfg, Bsz, cache_len, cdt)
-    x, _, new_caches = _run_blocks(params, cfg, x, positions, caches=caches)
-    new_caches["pos"] = jnp.asarray(S, jnp.int32)
+    if mask is None:
+        positions = jnp.arange(S)
+        x, _, new_caches = _run_blocks(params, cfg, x, positions,
+                                       caches=caches)
+        new_caches["pos"] = jnp.asarray(S, jnp.int32)
+    else:
+        mask = mask.astype(bool)
+        lens = mask.sum(-1).astype(jnp.int32)                      # [B]
+        positions = jnp.arange(S)[None, :] - (S - lens[:, None])   # [B, S]
+        x, _, new_caches = _run_blocks(params, cfg, x, positions,
+                                       caches=caches, seq_mask=mask)
+        new_caches["pos"] = lens
+    # left padding means the last real token is at index S-1 in every row
     logits = _logits(params, cfg, x[:, -1:])
     return logits[:, 0], new_caches
 
 
 def lm_decode_step(params, cfg: ArchConfig, tokens: jax.Array, caches: dict
                    ) -> Tuple[jax.Array, dict]:
-    """One decode step.  tokens [B, 1]; caches from prefill/init."""
+    """One decode step.  tokens [B, 1]; caches from prefill/init.
+
+    ``caches["pos"]`` is a scalar (uniform batch) or [B] (per-row, after
+    a masked ragged prefill); per-row positions route the attention
+    blocks through the per-row ring-cache path.
+    """
     cdt = jnp.dtype(cfg.compute_dtype)
     params = jax.tree_util.tree_map(
         lambda p: p.astype(cdt) if p.dtype == jnp.float32 and p.ndim >= 2 else p,
@@ -361,7 +398,10 @@ def lm_decode_step(params, cfg: ArchConfig, tokens: jax.Array, caches: dict
     x = emb[tokens]
     x = constrain(x, "batch", None, "embed")
     pos = caches["pos"]
-    positions = pos[None] + jnp.arange(1)
+    if pos.ndim == 0:
+        positions = pos[None] + jnp.arange(1)          # [1], shared
+    else:
+        positions = pos[:, None] + jnp.arange(1)       # [B, 1], per-row
     x, _, new_caches = _run_blocks(params, cfg, x, positions, caches=caches)
     new_caches["pos"] = pos + 1
     logits = _logits(params, cfg, x)

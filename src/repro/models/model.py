@@ -64,6 +64,16 @@ class Model:
         return LM.lm_loss(params, self.cfg, batch)
 
     # ---------------- serving ----------------
+    @property
+    def supports_masked_prefill(self) -> bool:
+        """True when ragged LEFT-padded prompts can prefill in one
+        batched call via ``batch["length_mask"]`` (attention blocks
+        exclude pad keys exactly; recurrent state has no pad-skip, and
+        the frame/patch frontends own their prefix semantics)."""
+        return (self.cfg.family != "encdec"
+                and self.cfg.frontend == "embed"
+                and all(k == "attn" for k in self.cfg.block_pattern))
+
     def prefill(self, params, batch, cache_len: int):
         if self.cfg.family == "encdec":
             return ED.encdec_prefill(params, self.cfg, batch,

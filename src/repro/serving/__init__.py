@@ -1,10 +1,20 @@
-"""Serving runtime.
+"""Serving runtime: coded-hedged multi-replica serving.
 
-Public surface: ``Request`` and ``ServingEngine`` — continuous-batching
-inference with per-slot deadlines and request hedging (a slot that
-misses its deadline re-issues to another replica, first answer wins):
-the inference-side analogue of the training deadline/error trade
-(docs/architecture.md 3).
+Public surface (docs/architecture.md §3):
+
+  * ``ServingEngine`` / ``Request`` — single-replica continuous
+    batching: per-slot admission and retirement over a vmapped decode
+    pool, with length-masked ragged prefill;
+  * ``HedgePolicy`` / ``HedgeController`` / ``hedge_outcomes`` —
+    request replication with deadline cancellation (fires at an online
+    tail quantile, first finisher wins, loser cancelled);
+  * ``Router`` / ``ReplicaTailEstimator`` — uniform and
+    power-of-two-choices replica selection from sliding tail estimates;
+  * ``simulate_serving`` / ``pareto_front`` — vectorized multi-replica
+    trace replay for million-request tail/overhead Pareto fronts (E12).
 """
 
-from .engine import Request, ServingEngine  # noqa: F401
+from .engine import Request, ServingEngine, SlotEvent  # noqa: F401
+from .hedge import HedgeController, HedgePolicy, hedge_outcomes  # noqa: F401
+from .router import ReplicaTailEstimator, Router  # noqa: F401
+from .simulator import SimResult, pareto_front, simulate_serving  # noqa: F401

@@ -1,16 +1,33 @@
-"""Batched serving engine: prefill + step-decode with a continuous-
-batching slot scheduler.
+"""Single-replica serving engine: masked ragged prefill + slot-level
+continuous batching.
+
+``generate_batch`` is the synchronous API: ragged prompts prefill in ONE
+batched call via the length-masked prefill path (``Model.prefill`` with
+``batch["length_mask"]``), so mixed-length batches produce exactly the
+tokens per-request generation would (pad keys are excluded from
+attention and real tokens keep their unpadded positions).
+
+``serve_queue`` is REAL continuous batching: a fixed pool of ``B`` decode
+slots, each slot admitted/retired independently.  A request prefills at
+admission (exact length, batch 1 — correct for every model family
+including recurrent state), its cache is inserted into the slot pool,
+and every decode step advances all occupied slots in one vmapped
+``decode_step``.  A slot retires the moment its request reaches its own
+``max_new_tokens`` (``Request.done`` is set) and is immediately re-used
+by the next pending request while the other slots keep decoding — there
+are no synchronous waves and no over-decoding past a request's budget.
 
 Straggler note: gradient coding is a *training* technique (there is no
 gradient sum to code at inference); the serving-side mitigation at scale
-is request replication / deadline hedging, which the scheduler models via
-per-slot deadlines.  See docs/architecture.md §3.
+is request replication / deadline hedging — implemented by
+``serving.hedge`` + ``serving.router`` over the multi-replica simulator
+in ``serving.simulator``.  See docs/architecture.md §3.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +35,7 @@ import numpy as np
 
 from ..models import Model
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "SlotEvent", "ServingEngine"]
 
 
 @dataclasses.dataclass
@@ -30,53 +47,181 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass(frozen=True)
+class SlotEvent:
+    """One scheduler transition (the occupancy-invariant test hook)."""
+    kind: str                    # "admit" | "retire"
+    rid: int
+    slot: int
+    tick: int                    # decode steps executed so far
+
+
 class ServingEngine:
-    """Fixed-slot continuous batching over a single shared KV cache."""
+    """Continuous batching over a fixed pool of decode slots.
+
+    ``greedy=True`` decodes by argmax; ``greedy=False`` samples with
+    ``temperature`` from a PRNG keyed on ``(seed, rid, token_index)`` —
+    independent of batch composition, so a request samples the same
+    continuation whether it is served alone or packed with others.
+    """
 
     def __init__(self, model: Model, params, batch_slots: int,
-                 cache_len: int, greedy: bool = True):
+                 cache_len: int, greedy: bool = True,
+                 temperature: float = 1.0, seed: int = 0):
+        if batch_slots <= 0:
+            raise ValueError(f"batch_slots must be > 0, got {batch_slots}")
         self.model = model
         self.params = params
         self.B = batch_slots
         self.cache_len = cache_len
         self.greedy = greedy
+        self.temperature = float(temperature)
+        self._key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_len=cache_len))
+        # slot pool decode: vmap over a leading slot axis of stacked
+        # per-slot (batch-1) caches — per-leaf batch-axis positions never
+        # matter because the slot axis is always axis 0
+        self._slot_decode = jax.jit(
+            jax.vmap(model.decode_step, in_axes=(None, 0, 0)))
+        self.events: List[SlotEvent] = []   # admission/retirement log
+        self._tick = 0
 
-    def generate_batch(self, prompts: List[np.ndarray], max_new: int
+    # ------------------------------------------------------------------
+    # token selection
+    # ------------------------------------------------------------------
+
+    def _select(self, logits: jax.Array, rid: int, t_index: int) -> int:
+        """Next token for one row of logits [Vp]."""
+        if self.greedy:
+            return int(jnp.argmax(logits))
+        key = jax.random.fold_in(jax.random.fold_in(self._key, rid), t_index)
+        return int(jax.random.categorical(
+            key, logits.astype(jnp.float32) / self.temperature))
+
+    # ------------------------------------------------------------------
+    # synchronous batched API
+    # ------------------------------------------------------------------
+
+    def generate_batch(self, prompts: List[np.ndarray], max_new: int,
+                       rids: Optional[Sequence[int]] = None
                        ) -> List[List[int]]:
-        """Simple synchronous API: same-length prompts, batched decode."""
+        """Batched generation for (possibly ragged) prompts.
+
+        Same-length prompts prefill unmasked; mixed lengths left-pad and
+        prefill through the length-masked path, which matches
+        per-request outputs exactly.  Models without masked-prefill
+        support (recurrent blocks, frame/patch frontends) fall back to
+        per-request generation for ragged inputs.  ``rids`` seed the
+        sampling PRNG per row (defaults to the row index).
+        """
         B = len(prompts)
-        toks = jnp.asarray(np.stack(prompts), jnp.int32)
-        logits, caches = self._prefill(self.params, {"tokens": toks})
+        if B == 0:
+            return []
+        if rids is None:
+            rids = list(range(B))
+        lens = [len(p) for p in prompts]
+        ragged = len(set(lens)) > 1
+        if ragged and not self.model.supports_masked_prefill:
+            return [self.generate_batch([p], max_new, rids=[rid])[0]
+                    for p, rid in zip(prompts, rids)]
+        L = max(lens)
+        toks = np.zeros((B, L), np.int32)
+        mask = np.zeros((B, L), bool)
+        for i, p in enumerate(prompts):
+            toks[i, L - len(p):] = p          # left-pad
+            mask[i, L - len(p):] = True
+        batch = {"tokens": jnp.asarray(toks)}
+        if ragged:
+            batch["length_mask"] = jnp.asarray(mask)
+        logits, caches = self._prefill(self.params, batch)
         outs: List[List[int]] = [[] for _ in range(B)]
-        cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        cur = np.empty((B, 1), np.int32)
         for b in range(B):
+            cur[b, 0] = self._select(logits[b], rids[b], 0)
             outs[b].append(int(cur[b, 0]))
-        for _ in range(max_new - 1):
-            logits, caches = self._decode(self.params, cur, caches)
-            cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        for t in range(1, max_new):
+            logits, caches = self._decode(self.params, jnp.asarray(cur),
+                                          caches)
             for b in range(B):
+                cur[b, 0] = self._select(logits[b], rids[b], t)
                 outs[b].append(int(cur[b, 0]))
         return outs
 
+    # ------------------------------------------------------------------
+    # continuous batching
+    # ------------------------------------------------------------------
+
+    def _admit(self, r: Request, slot: int, pool, cur: np.ndarray):
+        """Prefill one request (exact length, batch 1) into a slot."""
+        if len(r.prompt) + r.max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"request {r.rid}: prompt {len(r.prompt)} + max_new "
+                f"{r.max_new_tokens} exceeds cache_len {self.cache_len}")
+        prompt = jnp.asarray(np.asarray(r.prompt, np.int32)[None])
+        logits, cache = self._prefill(self.params, {"tokens": prompt})
+        tok = self._select(logits[0], r.rid, 0)
+        r.generated.append(tok)
+        cur[slot] = tok
+        self.events.append(SlotEvent("admit", r.rid, slot, self._tick))
+        if pool is None:
+            # first admission defines the stacked pool template
+            pool = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((self.B,) + x.shape, x.dtype), cache)
+        pool = jax.tree_util.tree_map(
+            lambda full, one: full.at[slot].set(one), pool, cache)
+        return pool
+
+    def _retire(self, r: Request, slot: int,
+                results: Dict[int, List[int]]) -> None:
+        r.done = True
+        results[r.rid] = r.generated
+        self.events.append(SlotEvent("retire", r.rid, slot, self._tick))
+
     def serve_queue(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Continuous batching: keep `B` slots busy, admit new requests as
-        slots free up.  Prompts are right-aligned into a shared step loop
-        (one prefill per admission, shared decode steps)."""
-        pending = list(requests)
+        """Serve a queue with per-slot admission and retirement.
+
+        Each occupied slot decodes exactly its request's
+        ``max_new_tokens`` tokens; freed slots admit the next pending
+        request immediately, while the remaining slots keep decoding.
+        """
+        pending = list(requests)[::-1]          # pop() admits FIFO
         results: Dict[int, List[int]] = {}
-        while pending:
-            wave, pending = pending[: self.B], pending[self.B:]
-            # pad prompts to the wave max
-            L = max(len(r.prompt) for r in wave)
-            toks = np.zeros((len(wave), L), np.int32)
-            for i, r in enumerate(wave):
-                toks[i, L - len(r.prompt):] = r.prompt  # left-pad
-            outs = self.generate_batch([toks[i] for i in range(len(wave))],
-                                       max_new=max(r.max_new_tokens
-                                                   for r in wave))
-            for i, r in enumerate(wave):
-                results[r.rid] = outs[i][: r.max_new_tokens]
+        slots: List[Optional[Request]] = [None] * self.B
+        remaining = [0] * self.B
+        emitted = [0] * self.B                  # tokens emitted per slot
+        cur = np.zeros((self.B, 1), np.int32)
+        pool = None
+
+        while pending or any(s is not None for s in slots):
+            # admission: fill every free slot from the queue
+            for b in range(self.B):
+                while slots[b] is None and pending:
+                    r = pending.pop()
+                    pool = self._admit(r, b, pool, cur)
+                    if r.max_new_tokens <= 1:
+                        self._retire(r, b, results)
+                        continue            # slot still free: admit again
+                    slots[b] = r
+                    remaining[b] = r.max_new_tokens - 1
+                    emitted[b] = 1
+            if not any(s is not None for s in slots):
+                continue                    # queue drained by 1-token reqs
+            # one decode step over the whole pool (idle slots decode
+            # garbage that is never read — the price of a fixed shape)
+            logits, pool = self._slot_decode(self.params, jnp.asarray(
+                cur[:, :, None]), pool)
+            self._tick += 1
+            for b, r in enumerate(slots):
+                if r is None:
+                    continue
+                tok = self._select(logits[b, 0], r.rid, emitted[b])
+                r.generated.append(tok)
+                cur[b] = tok
+                emitted[b] += 1
+                remaining[b] -= 1
+                if remaining[b] == 0:
+                    self._retire(r, b, results)
+                    slots[b] = None
         return results

@@ -1,0 +1,105 @@
+"""Request hedging: replication + deadline cancellation for serving.
+
+The serving-side analogue of the paper's gradient coding: where coded
+training pays a compute-overhead factor to make the gradient *sum*
+robust to the slowest workers, hedged serving pays a (much smaller)
+duplicate-request overhead to make each *request* robust to a slow
+replica.  Both trade bounded extra compute for a collapsed tail.
+
+Mechanics (Dean & Barroso, "The Tail at Scale"): a request goes to its
+primary replica; if no response arrives within a deadline set at an
+online tail quantile of recent primary latencies, a backup copy is
+issued to a second replica.  The first finisher wins and the loser is
+cancelled, so the backup only costs compute *after* the deadline:
+
+    fired    = T_primary > threshold
+    latency  = T_primary                       if not fired
+               min(T_primary, threshold + T_backup)  otherwise
+    compute  = latency + fired * (latency - threshold)
+
+(The winner runs for ``latency``; a fired loser is cancelled at the
+winner's finish, having burned ``latency - threshold``.)
+
+:class:`HedgeController` owns the online threshold: a sliding-window
+quantile of observed primary latencies (same window-quantile idiom as
+``control.estimator``), inactive (+inf threshold — never fires) until
+``warmup`` observations have arrived.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["HedgePolicy", "HedgeController", "hedge_outcomes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HedgePolicy:
+    """Hedging knobs.
+
+    ``quantile``: primary-latency quantile at which the backup fires.
+    Must undercut the fast-mode mass to help — e.g. with 1 of 8 replicas
+    slow, P(fast primary) = 0.875, so q = 0.95 lands *inside* the slow
+    mode and never fires on it; q = 0.85 is the useful regime.
+    ``warmup``: observations before hedging activates (cold threshold
+    is +inf).  ``window``: sliding window size for the online quantile.
+    """
+
+    quantile: float = 0.85
+    warmup: int = 256
+    window: int = 4096
+
+    def __post_init__(self):
+        if not (0.0 < self.quantile < 1.0):
+            raise ValueError(f"quantile={self.quantile} must be in (0, 1)")
+        if self.warmup < 1 or self.window < 1:
+            raise ValueError("warmup and window must be >= 1")
+
+
+class HedgeController:
+    """Online hedge-deadline controller (sliding-window tail quantile)."""
+
+    def __init__(self, policy: HedgePolicy):
+        self.policy = policy
+        self._window = np.empty(policy.window)
+        self._count = 0          # total observations ingested
+        self._head = 0           # ring-buffer write position
+
+    def threshold(self) -> float:
+        """Current hedge deadline; +inf while warming up."""
+        if self._count < self.policy.warmup:
+            return float("inf")
+        valid = self._window[: min(self._count, self.policy.window)]
+        return float(np.quantile(valid, self.policy.quantile))
+
+    def observe(self, latencies: np.ndarray) -> None:
+        """Fold a chunk of primary latencies into the sliding window."""
+        lat = np.asarray(latencies, dtype=np.float64).ravel()
+        if lat.size >= self.policy.window:
+            self._window[:] = lat[-self.policy.window:]
+            self._head = 0
+        else:
+            idx = (self._head + np.arange(lat.size)) % self.policy.window
+            self._window[idx] = lat
+            self._head = int((self._head + lat.size) % self.policy.window)
+        self._count += int(lat.size)
+
+
+def hedge_outcomes(primary: np.ndarray, backup: np.ndarray,
+                   threshold: float
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized hedge outcomes for one chunk of requests.
+
+    Returns ``(latency, compute, fired)`` with the first-finisher-wins /
+    cancel-the-loser semantics from the module docstring.  An infinite
+    ``threshold`` (warmup) degenerates to unhedged serving exactly.
+    """
+    p = np.asarray(primary, dtype=np.float64)
+    b = np.asarray(backup, dtype=np.float64)
+    fired = p > threshold
+    latency = np.where(fired, np.minimum(p, threshold + b), p)
+    compute = latency + np.where(fired, latency - threshold, 0.0)
+    return latency, compute, fired

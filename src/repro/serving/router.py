@@ -1,0 +1,107 @@
+"""Replica routing for multi-replica serving.
+
+:class:`ReplicaTailEstimator` keeps a per-replica sliding window of
+observed request latencies (the per-worker analogue of
+``control.estimator.StragglerEstimator``'s fleet-wide window) and
+exposes interpolated tail quantiles per replica.
+
+:class:`Router` assigns each request a (primary, backup) replica pair:
+
+  * ``uniform`` — primary uniform over replicas, backup uniform over
+    the *other* replicas;
+  * ``p2c`` — power of two choices: sample two distinct candidates,
+    route to the one with the lower estimated tail quantile; the loser
+    is the natural backup (already distinct, and second-best by the
+    estimate).
+
+All draws are vectorized per chunk and seeded, so a (seed, trace) pair
+fully determines every routing decision.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["ReplicaTailEstimator", "Router", "ROUTER_POLICIES"]
+
+ROUTER_POLICIES = ("uniform", "p2c")
+
+
+class ReplicaTailEstimator:
+    """Sliding-window per-replica latency quantiles.
+
+    ``update`` ingests (replica id, latency) pairs chunk-at-a-time;
+    each replica keeps its own ring of the last ``window`` latencies.
+    ``quantile(q)`` returns the per-replica estimate [n], falling back
+    to ``default`` for replicas with no observations yet.
+    """
+
+    def __init__(self, n: int, *, window: int = 512, default: float = 1.0):
+        if n <= 0:
+            raise ValueError(f"need n > 0, got {n}")
+        self.n = n
+        self.window = max(1, int(window))
+        self.default = float(default)
+        self._rows = np.empty((n, self.window))
+        self._count = np.zeros(n, dtype=np.int64)
+
+    def update(self, replicas: np.ndarray, latencies: np.ndarray) -> None:
+        r = np.asarray(replicas, dtype=np.int64)
+        lat = np.asarray(latencies, dtype=np.float64)
+        if r.shape != lat.shape:
+            raise ValueError(f"shape mismatch {r.shape} vs {lat.shape}")
+        if r.size == 0:
+            return
+        # group by replica (stable, so each replica sees its latencies
+        # in request order), then ring-write each group's chunk
+        order = np.argsort(r, kind="stable")
+        sr, sl = r[order], lat[order]
+        starts = np.flatnonzero(np.r_[True, sr[1:] != sr[:-1]])
+        sizes = np.diff(np.r_[starts, sr.size])
+        cum = np.arange(sr.size) - np.repeat(starts, sizes)
+        slots = (self._count[sr] + cum) % self.window
+        self._rows[sr, slots] = sl
+        uniq = sr[starts]
+        self._count[uniq] += sizes
+
+    def quantile(self, q: float) -> np.ndarray:
+        """Per-replica latency quantile [n] (``default`` when unseen)."""
+        out = np.full(self.n, self.default)
+        for j in np.flatnonzero(self._count):
+            m = min(int(self._count[j]), self.window)
+            out[j] = np.quantile(self._rows[j, :m], q)
+        return out
+
+
+class Router:
+    """Seeded (primary, backup) replica assignment per request chunk."""
+
+    def __init__(self, n: int, policy: str = "uniform", *, seed: int = 0,
+                 tail_q: float = 0.9, window: int = 512):
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; choose from {ROUTER_POLICIES}")
+        if n < 2:
+            raise ValueError(f"routing needs >= 2 replicas, got {n}")
+        self.n = n
+        self.policy = policy
+        self.tail_q = float(tail_q)
+        self.estimator = ReplicaTailEstimator(n, window=window)
+        self._rng = np.random.default_rng((seed, 0x52))
+
+    def assign(self, size: int):
+        """(primary, backup) replica ids for ``size`` requests."""
+        a = self._rng.integers(0, self.n, size)
+        # b distinct from a by construction
+        b = (a + 1 + self._rng.integers(0, self.n - 1, size)) % self.n
+        if self.policy == "uniform":
+            return a, b
+        est = self.estimator.quantile(self.tail_q)
+        better = est[a] <= est[b]
+        primary = np.where(better, a, b)
+        backup = np.where(better, b, a)
+        return primary, backup
+
+    def observe(self, replicas: np.ndarray, latencies: np.ndarray) -> None:
+        """Feed completed-request latencies back into the estimator."""
+        self.estimator.update(replicas, latencies)

@@ -1,0 +1,153 @@
+"""Vectorized multi-replica serving simulator.
+
+Replays a :class:`~repro.sim.traces.LatencyTrace` as per-replica latency
+streams (column j = replica j, via :class:`~repro.sim.traces.TraceCursor`)
+and pushes requests through routing + hedging *without any device
+execution*: requests are processed in numpy chunks (default 8192), so
+p99/p999-vs-compute-overhead Pareto fronts over >= 1M requests take
+seconds on a laptop.
+
+Per chunk:
+
+  1. the :class:`~repro.serving.router.Router` assigns (primary, backup)
+     replica pairs;
+  2. each replica's cursor yields the latencies those requests would
+     observe (the trace is a latency *stream* per replica — backup draws
+     consume the backup replica's stream whether or not the hedge fires,
+     which keeps the replay deterministic in (seed, trace));
+  3. :func:`~repro.serving.hedge.hedge_outcomes` converts
+     (primary, backup, threshold) into per-request latency / compute /
+     fired under first-finisher-wins cancellation;
+  4. observed primary latencies feed back into the hedge controller's
+     online quantile and the router's per-replica tail estimator.
+
+Everything downstream of the trace is a pure function of
+``(trace, policy, router policy, seed)`` — two runs with the same
+arguments produce bitwise-identical result arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..sim.traces import LatencyTrace, TraceCursor
+from .hedge import HedgeController, HedgePolicy, hedge_outcomes
+from .router import Router
+
+__all__ = ["SimResult", "simulate_serving", "pareto_front"]
+
+_QUANTS = (0.5, 0.9, 0.99, 0.999)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Per-request outcome arrays plus scalar summary."""
+
+    latency: np.ndarray          # [R] client-observed latency
+    compute: np.ndarray          # [R] replica-seconds burned
+    fired: np.ndarray            # [R] bool, hedge fired
+    primary: np.ndarray          # [R] primary replica id
+    quantiles: Dict[float, float]
+    mean_compute: float
+    hedge_rate: float
+
+    @property
+    def p99(self) -> float:
+        return self.quantiles[0.99]
+
+    @property
+    def p999(self) -> float:
+        return self.quantiles[0.999]
+
+    def overhead_vs(self, other: "SimResult") -> float:
+        """Compute overhead of this run relative to ``other`` (the
+        paper's compute-overhead axis, serving edition)."""
+        return self.mean_compute / other.mean_compute
+
+    def summary(self) -> Dict[str, float]:
+        out = {f"p{100 * q:g}": v for q, v in self.quantiles.items()}
+        out["mean_compute"] = self.mean_compute
+        out["hedge_rate"] = self.hedge_rate
+        return out
+
+
+def simulate_serving(trace: LatencyTrace, num_requests: int, *,
+                     policy: Optional[HedgePolicy] = None,
+                     router_policy: str = "uniform",
+                     seed: int = 0, chunk: int = 8192) -> SimResult:
+    """Run ``num_requests`` through the replica pool of ``trace``.
+
+    ``policy=None`` serves unhedged (backup streams are still consumed,
+    so hedged and unhedged runs of the same (seed, trace) see identical
+    primary latencies and differ only in hedging).
+    """
+    if num_requests <= 0:
+        raise ValueError(f"num_requests must be > 0, got {num_requests}")
+    if chunk <= 0:
+        raise ValueError(f"chunk must be > 0, got {chunk}")
+    router = Router(trace.n, router_policy, seed=seed)
+    controller = HedgeController(policy) if policy is not None else None
+    cursor = TraceCursor(trace)
+
+    latency = np.empty(num_requests)
+    compute = np.empty(num_requests)
+    fired = np.zeros(num_requests, dtype=bool)
+    primary_ids = np.empty(num_requests, dtype=np.int64)
+
+    done = 0
+    while done < num_requests:
+        size = min(chunk, num_requests - done)
+        pr, br = router.assign(size)
+        # one interleaved draw so each replica's stream is consumed in
+        # request order regardless of primary/backup role
+        both = cursor.take(np.concatenate([pr, br]))
+        t_p, t_b = both[:size], both[size:]
+        if controller is not None:
+            thr = controller.threshold()
+            lat, comp, f = hedge_outcomes(t_p, t_b, thr)
+            controller.observe(t_p)
+        else:
+            lat, comp, f = t_p, t_p.copy(), np.zeros(size, dtype=bool)
+        router.observe(pr, t_p)
+        sl = slice(done, done + size)
+        latency[sl], compute[sl], fired[sl] = lat, comp, f
+        primary_ids[sl] = pr
+        done += size
+
+    quants = {q: float(np.quantile(latency, q)) for q in _QUANTS}
+    return SimResult(
+        latency=latency, compute=compute, fired=fired, primary=primary_ids,
+        quantiles=quants, mean_compute=float(compute.mean()),
+        hedge_rate=float(fired.mean()))
+
+
+def pareto_front(trace: LatencyTrace, num_requests: int, *,
+                 quantiles=(0.5, 0.75, 0.85, 0.95, 0.99),
+                 router_policy: str = "uniform", seed: int = 0,
+                 chunk: int = 8192) -> Dict:
+    """Sweep hedge quantiles; return the tail-vs-overhead frontier.
+
+    Result rows share one unhedged baseline run (same seed/trace), so
+    ``overhead`` is directly the extra replica-seconds per request the
+    hedge quantile buys its tail reduction with.
+    """
+    base = simulate_serving(trace, num_requests, policy=None,
+                            router_policy=router_policy, seed=seed,
+                            chunk=chunk)
+    rows = []
+    for q in quantiles:
+        res = simulate_serving(trace, num_requests,
+                               policy=HedgePolicy(quantile=q),
+                               router_policy=router_policy, seed=seed,
+                               chunk=chunk)
+        rows.append({"quantile": q, "p50": res.quantiles[0.5],
+                     "p99": res.p99, "p999": res.p999,
+                     "hedge_rate": res.hedge_rate,
+                     "overhead": res.overhead_vs(base)})
+    return {"unhedged": {"p50": base.quantiles[0.5], "p99": base.p99,
+                         "p999": base.p999,
+                         "mean_compute": base.mean_compute},
+            "rows": rows}

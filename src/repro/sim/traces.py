@@ -32,7 +32,8 @@ import numpy as np
 
 from ..runtime.straggler import StragglerModel, make_straggler_model
 
-__all__ = ["LatencyTrace", "trace_from_model", "make_trace", "TRACE_SOURCES"]
+__all__ = ["LatencyTrace", "TraceCursor", "trace_from_model", "make_trace",
+           "TRACE_SOURCES"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +95,45 @@ class LatencyTrace:
     @classmethod
     def load(cls, path: Union[str, Path]) -> "LatencyTrace":
         return cls.from_json(Path(path).read_text())
+
+
+class TraceCursor:
+    """Per-column replay cursor over a :class:`LatencyTrace`.
+
+    The serving simulator treats column j as replica j's latency
+    *stream*: each draw for a replica consumes that replica's next row
+    (wrapping modulo ``steps``), independently of the other replicas.
+    ``take`` is fully vectorized — a chunk of replica ids draws all its
+    latencies in one call, with requests routed to the same replica
+    consuming consecutive rows in request order.
+    """
+
+    def __init__(self, trace: LatencyTrace):
+        if trace.steps == 0 or trace.n == 0:
+            raise ValueError("cursor needs a non-empty trace")
+        self.trace = trace
+        self._pos = np.zeros(trace.n, dtype=np.int64)
+
+    def take(self, replicas: np.ndarray) -> np.ndarray:
+        """Next latency for each entry of ``replicas`` ([R] int)."""
+        r = np.asarray(replicas, dtype=np.int64)
+        if r.size == 0:
+            return np.empty(0)
+        if r.min() < 0 or r.max() >= self.trace.n:
+            raise ValueError(f"replica ids out of range [0, {self.trace.n})")
+        order = np.argsort(r, kind="stable")
+        sr = r[order]
+        # cumcount within each replica group (sr is sorted, so groups
+        # are contiguous): entry i gets its replica's (pos + cumcount)th row
+        starts = np.flatnonzero(np.r_[True, sr[1:] != sr[:-1]])
+        sizes = np.diff(np.r_[starts, sr.size])
+        cum = np.arange(sr.size) - np.repeat(starts, sizes)
+        rows = (self._pos[sr] + cum) % self.trace.steps
+        out = np.empty(r.size)
+        out[order] = self.trace.latencies[rows, sr]
+        uniq = sr[starts]
+        self._pos[uniq] = (self._pos[uniq] + sizes) % self.trace.steps
+        return out
 
 
 def _has_latency_distribution(model: StragglerModel) -> bool:
