@@ -75,6 +75,19 @@ def _extract_wallclock_frontier(payload: dict) -> dict:
     return out
 
 
+def _extract_elastic_churn(payload: dict) -> dict:
+    # modelled time-to-target ratios through the churn storm —
+    # deterministic given (seeds, storm config), machine-free.  The
+    # churn advantage (restart/elastic) sits right at the gate floor;
+    # the oblivious penalty rides the 100x inflation clip, so it is
+    # pinned conservatively via --keep-min like everything else
+    adv = payload["advantage"]
+    return {
+        "churn_advantage[storm]": float(adv["churn_advantage"]),
+        "oblivious_penalty[storm]": float(adv["oblivious_penalty"]),
+    }
+
+
 def _extract_serving_tail(payload: dict) -> dict:
     # unhedged p99 / best hedged p99 within the 1.1x overhead budget —
     # a deterministic (seed, trace) ratio like the E11 advantages; it
@@ -89,6 +102,8 @@ TRACKED = (
     ("mc_throughput", "E10 batched decode speedups", _extract_mc_throughput),
     ("wallclock_frontier", "E11 ClusterSim speedup", _extract_wallclock_frontier),
     ("serving_tail", "E12 hedged-serving tail advantage", _extract_serving_tail),
+    ("elastic_churn", "E13 churn time-to-target advantage",
+     _extract_elastic_churn),
 )
 
 

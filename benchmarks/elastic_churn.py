@@ -1,0 +1,265 @@
+"""E13: time-to-target through membership churn (docs/benchmarks.md).
+
+Drives a preemption/scale-out storm (``sim.traces.make_churn_scenario``)
+through :func:`repro.sim.simulate_churn` under the three recovery modes
+and gates their modelled time-to-target ordering:
+
+    elastic  <=  restart  <=  oblivious
+
+* ``elastic``  — re-code the fleet at every membership epoch (the
+  paper's O(n s) cheap-construction property makes the re-code ~free);
+* ``restart``  — gang-scheduling semantics: any membership change
+  restores the last checkpoint and redoes the lost steps plus a
+  scheduler penalty;
+* ``oblivious`` — the code ignores churn, departed workers become
+  permanent erasures and decode error accumulates (time-to-target
+  inflates toward the canonical 100x clip).
+
+Two further sections make the gate end-to-end honest:
+
+* **external replay** — a committed sample in the public Google
+  ``clusterdata-2011`` ``machine_events`` schema is ingested
+  (``ingest_machine_events``), round-tripped through the ChurnScenario
+  JSON path, and replayed through all three modes, so the arrival/
+  departure process of a real-format cluster trace flows through the
+  same machinery CI gates;
+* **trainer recovery** — a tiny CodedTrainer is run through the same
+  scenario twice: uninterrupted, and killed-then-restarted (a fresh
+  trainer resuming via checkpoint metadata).  The resumed run's
+  per-step mean_ce and final params must equal the uninterrupted one's
+  bitwise — checkpoints carry enough state (code family/params/s/n/
+  decoder, build counter, churn cursor, live ids, controller state)
+  that recovery is exact, not approximate.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.elastic_churn [--steps N]
+        [--seeds 7,17,27] [--skip-trainer]
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import numpy as np
+
+from repro.sim import (
+    ChurnScenario,
+    RECOVERY_MODES,
+    ingest_machine_events,
+    make_churn_scenario,
+    simulate_churn,
+    time_to_target_error,
+)
+
+from .common import ART, save_csv, save_json
+
+DATA = Path(__file__).resolve().parent / "data"
+SAMPLE_CSV = DATA / "machine_events_sample.csv"
+
+# the storm: heavy spot preemption + block kills + scale-outs over a
+# 32-worker fleet (capacity headroom for arrivals), heterogeneous
+# per-worker speeds
+STORM = dict(
+    n0=32,
+    preempt_rate=0.08,
+    preempt_max=3,
+    block_rate=0.02,
+    scaleup_rate=0.03,
+    speed_sigma=0.3,
+    min_workers=8,
+)
+SCHEME = "bgc"  # frc needs s | k and n == k: churn sizes are arbitrary
+S = 6
+CKPT_EVERY = 10
+RESTART_PENALTY = 10.0
+
+
+def _modes(scenario: ChurnScenario, *, s: int = S,
+           ckpt_every: int = CKPT_EVERY) -> dict:
+    """time-to-target (and raw time/error) per recovery mode."""
+    out = {}
+    for recovery in RECOVERY_MODES:
+        res = simulate_churn(SCHEME, scenario, "deadline", decoder="onestep",
+                             s=s, recovery=recovery, ckpt_every=ckpt_every,
+                             restart_penalty=RESTART_PENALTY)
+        out[recovery] = {
+            "total_time": res.total_time,
+            "mean_error": res.mean_error,
+            "time_to_target": time_to_target_error(res),
+            "epochs": res.extras["epochs"],
+            "decode_calls": res.extras["decode_calls"],
+            "redo_time": res.extras.get("redo_time", 0.0),
+        }
+    return out
+
+
+def _trainer_recovery_check(steps: int = 30) -> dict:
+    """Killed-then-restarted CodedTrainer == uninterrupted, bitwise."""
+    import tempfile
+
+    import jax
+
+    from repro import configs as CFG
+    from repro.models import build_model
+    from repro.optim import OptConfig
+    from repro.training import CodedTrainConfig, CodedTrainer
+
+    model = build_model(CFG.get_config("minicpm-2b", smoke=True))
+    scn = make_churn_scenario("bimodal", steps=steps, n0=8,
+                              preempt_rate=0.12, scaleup_rate=0.06,
+                              min_workers=3, seed=11)
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=max(steps, 50))
+
+    def cfg(d):
+        return CodedTrainConfig(code=SCHEME, n_workers=8, s=2, steps=steps,
+                                seq_len=8, seed=0, opt=opt, log_every=1,
+                                ckpt_dir=d, ckpt_every=max(steps // 4, 1))
+
+    with tempfile.TemporaryDirectory() as d_ref:
+        ref = CodedTrainer(model, cfg(d_ref), churn=scn, recovery="elastic")
+        out_ref = ref.run()
+    ce_ref = {r["step"]: r["mean_ce"] for r in out_ref["history"]}
+
+    kill_at = (2 * steps) // 3  # past the first checkpoint, mid-run
+    with tempfile.TemporaryDirectory() as d:
+        first = CodedTrainer(model, cfg(d), churn=scn, recovery="elastic")
+        first.run(steps=kill_at)  # "killed" here: process ends, dir stays
+        resumed = CodedTrainer(model, cfg(d), churn=scn, recovery="elastic")
+        out_res = resumed.run()  # fresh process restores + finishes the job
+
+        ce_match = all(ce_ref[r["step"]] == r["mean_ce"]
+                       for r in out_res["history"])
+        leaves_ref = jax.tree_util.tree_leaves(out_ref["state"]["params"])
+        leaves_res = jax.tree_util.tree_leaves(out_res["state"]["params"])
+        params_match = all(np.array_equal(np.asarray(a), np.asarray(b))
+                           for a, b in zip(leaves_ref, leaves_res))
+    return {
+        "resumed_from": out_res["history"][0]["step"],
+        "kill_at": kill_at,
+        "mean_ce_bitwise_match": bool(ce_match),
+        "params_bitwise_match": bool(params_match),
+        "churn_events_trained_through": len(out_ref["history"]) and
+        len(resumed.churn_log) + len(first.churn_log),
+    }
+
+
+def run(steps: int = 300, seeds=(7, 17, 27), trainer: bool = True) -> dict:
+    # ---- generated storm, three recovery modes, several seeds ----
+    rows = []
+    agg: dict = {m: [] for m in RECOVERY_MODES}
+    per_seed_ok = []
+    for seed in seeds:
+        scn = make_churn_scenario("bimodal", steps=steps, seed=seed, **STORM)
+        modes = _modes(scn)
+        for mode, r in modes.items():
+            rows.append(dict(section="storm", seed=seed, recovery=mode,
+                             n_events=len(scn.events), **r))
+            agg[mode].append(r["time_to_target"])
+        tts = {m: modes[m]["time_to_target"] for m in RECOVERY_MODES}
+        per_seed_ok.append(tts["elastic"] <= tts["restart"]
+                           <= tts["oblivious"])
+    mean_tt = {m: float(np.mean(v)) for m, v in agg.items()}
+
+    # ---- external trace: ingest -> JSON round trip -> replay ----
+    ext = ingest_machine_events(SAMPLE_CSV, bin_seconds=300.0, seed=0)
+    ART.mkdir(parents=True, exist_ok=True)
+    replay_path = ART / "churn_external_replay.json"
+    ext.save(replay_path)
+    ext2 = ChurnScenario.load(replay_path)  # the JSON-replay path
+    roundtrip_ok = (ext2.events == ext.events and ext2.n0 == ext.n0
+                    and np.array_equal(ext2.trace.latencies,
+                                       ext.trace.latencies)
+                    and np.array_equal(ext2.speed, ext.speed))
+    ext_modes = _modes(ext2, s=4, ckpt_every=5)
+    for mode, r in ext_modes.items():
+        rows.append(dict(section="external", seed=0, recovery=mode,
+                         n_events=len(ext2.events), **r))
+
+    # ---- trainer restart recovery (the checkpoint metadata contract) ----
+    trainer_res = _trainer_recovery_check() if trainer else None
+
+    checks = {
+        # the E13 gate: through the storm, elastic beats restart beats
+        # churn-oblivious on mean modelled time-to-target, every seed
+        "storm_ordering_each_seed": all(per_seed_ok),
+        "storm_ordering_mean": (mean_tt["elastic"] <= mean_tt["restart"]
+                                <= mean_tt["oblivious"]),
+        # external-format trace flows end to end and re-coding never
+        # loses to redoing work from checkpoints on it either
+        "external_roundtrip": bool(roundtrip_ok),
+        "external_elastic_le_restart": (
+            ext_modes["elastic"]["time_to_target"]
+            <= ext_modes["restart"]["time_to_target"]),
+        # one batched decode per membership epoch (ClusterSim invariant)
+        "decode_calls_match_epochs": all(
+            r["decode_calls"] == r["epochs"] for r in rows
+            if r["recovery"] != "oblivious"),
+    }
+    if trainer_res is not None:
+        checks["restart_equals_uninterrupted"] = (
+            trainer_res["mean_ce_bitwise_match"]
+            and trainer_res["params_bitwise_match"])
+
+    payload = {
+        "benchmark": "elastic_churn",
+        "storm": dict(STORM, steps=steps, seeds=list(seeds), scheme=SCHEME,
+                      s=S, ckpt_every=CKPT_EVERY,
+                      restart_penalty=RESTART_PENALTY),
+        "mean_time_to_target": mean_tt,
+        # machine-free modelled ratios tracked by check_regression
+        "advantage": {
+            "churn_advantage": mean_tt["restart"] / mean_tt["elastic"],
+            "oblivious_penalty": mean_tt["oblivious"] / mean_tt["elastic"],
+        },
+        "external": {"source": SAMPLE_CSV.name, "n0": ext.n0,
+                     "n_max": ext.n_max, "steps": ext.steps,
+                     "n_events": len(ext.events), "modes": ext_modes},
+        "trainer_recovery": trainer_res,
+        "rows": rows,
+        "checks": checks,
+    }
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=300,
+                    help="storm length in steps (default 300)")
+    ap.add_argument("--seeds", default="7,17,27",
+                    help="comma list of storm seeds")
+    ap.add_argument("--skip-trainer", action="store_true",
+                    help="skip the (jitted) trainer recovery check")
+    args = ap.parse_args(argv)
+    seeds = tuple(int(x) for x in args.seeds.split(","))
+
+    payload = run(steps=args.steps, seeds=seeds,
+                  trainer=not args.skip_trainer)
+    save_json("elastic_churn", payload)
+    save_csv("elastic_churn", payload["rows"])
+
+    print(f"storm mean time-to-target over seeds {list(seeds)}:")
+    for mode, tt in payload["mean_time_to_target"].items():
+        print(f"  {mode:<10} {tt:10.1f}")
+    adv = payload["advantage"]
+    print(f"churn advantage (restart/elastic):    {adv['churn_advantage']:.2f}x")
+    print(f"oblivious penalty (oblivious/elastic): "
+          f"{adv['oblivious_penalty']:.2f}x")
+    ext = payload["external"]
+    print(f"external replay: {ext['source']} n0={ext['n0']} "
+          f"steps={ext['steps']} events={ext['n_events']}")
+    if payload["trainer_recovery"] is not None:
+        tr = payload["trainer_recovery"]
+        print(f"trainer recovery: killed at {tr['kill_at']}, resumed from "
+              f"{tr['resumed_from']}, bitwise match="
+              f"{tr['mean_ce_bitwise_match'] and tr['params_bitwise_match']}")
+
+    ok = all(payload["checks"].values())
+    for name, passed in payload["checks"].items():
+        print(f"  {'PASS' if passed else 'MISMATCH'}  {name}")
+    print("E13", "PASS" if ok else "MISMATCH")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

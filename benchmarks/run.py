@@ -13,6 +13,7 @@ Runs, in order (E-numbers from docs/architecture.md §4):
     E10    mc_throughput     looped vs batched Monte-Carlo decode
     E11    wallclock_frontier  ClusterSim runtime-vs-accuracy frontier
     E12    serving_tail      hedged-serving p99/p999 vs compute overhead
+    E13    elastic_churn     time-to-target through membership churn
 
 Artifacts land in artifacts/bench/ (+ artifacts/roofline.{json,md});
 each module prints PASS/MISMATCH against the paper's claims.
@@ -39,8 +40,8 @@ def main(argv=None) -> int:
 
     from . import adversary_bench, decoding_cost, e2e_convergence, \
         fig5_algorithmic, fig_errors, theory_check
-    from . import mc_throughput, roofline_report, serving_tail, \
-        wallclock_frontier
+    from . import elastic_churn, mc_throughput, roofline_report, \
+        serving_tail, wallclock_frontier
 
     jobs = [
         ("fig_errors", lambda: fig_errors.main(["--trials", str(trials)])),
@@ -60,6 +61,11 @@ def main(argv=None) -> int:
         # E12 is vectorized numpy replay: the >= 1M-request gate stays
         # full-scale even under --quick (seconds, no device execution)
         ("serving_tail", lambda: serving_tail.main([])),
+        # E13's storm is analytic (seconds); --quick skips only the
+        # jitted trainer-recovery section, which the slow test lane
+        # already covers
+        ("elastic_churn", lambda: elastic_churn.main(
+            ["--skip-trainer"] if args.quick else [])),
         ("roofline_report", lambda: roofline_report.main([])),
     ]
     if args.only:

@@ -76,8 +76,14 @@ def _prune(directory: str, keep_last: int) -> None:
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_") and not d.endswith(".tmp")]
+    steps = []
+    for d in os.listdir(directory):
+        if not d.startswith("step_") or d.endswith(".tmp"):
+            continue
+        try:   # foreign step_* entries (editors, partial copies) are not
+            steps.append(int(d.split("_", 1)[1]))   # checkpoints — skip
+        except ValueError:
+            continue
     return max(steps) if steps else None
 
 
@@ -135,18 +141,28 @@ class AsyncCheckpointer:
             finally:
                 self._q.task_done()
 
+    def _raise_pending(self):
+        """Surface a background failure ONCE: the error is cleared when
+        raised, so a later save() can retry instead of replaying the same
+        stale exception forever."""
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
     def save(self, step: int, tree: Any, metadata: Optional[dict] = None):
-        if self._err:
-            raise self._err
+        self._raise_pending()
         host_tree = jax.tree_util.tree_map(np.asarray, tree)  # device->host now
         self._q.put((step, host_tree, metadata))
 
     def wait(self):
         self._q.join()
-        if self._err:
-            raise self._err
+        self._raise_pending()
 
     def close(self):
-        self.wait()
-        self._q.put(None)
-        self._thread.join(timeout=10)
+        # the sentinel + join run even when wait() surfaces a background
+        # failure — close() must never leak the worker thread
+        try:
+            self.wait()
+        finally:
+            self._q.put(None)
+            self._thread.join(timeout=10)

@@ -177,6 +177,52 @@ class StragglerEstimator:
 
     # ------------------------------------------------------------------
 
+    def state_dict(self) -> dict:
+        """JSON-serializable snapshot of the raw (pre-debias) EW state,
+        for checkpoint metadata — restoring it makes a resumed run's
+        controller decisions identical to an uninterrupted one's."""
+        return {
+            "n": self.n,
+            "alpha": self.alpha,
+            "err_alpha": self.err_alpha,
+            "blocks": self.blocks,
+            "window": self.window,
+            "steps": self._steps,
+            "erasure": self._erasure.tolist(),
+            "corr": self._corr,
+            "corr_steps": self._corr_steps,
+            "err": self._err,
+            "err_steps": self._err_steps,
+            "lat_rows": [row.tolist() for row in self._lat_rows],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot (rebuilds block
+        membership if the checkpointed fleet size differs)."""
+        n = int(state["n"])
+        if n != self.n:
+            self.__init__(
+                n,
+                alpha=float(state["alpha"]),
+                blocks=int(state["blocks"]),
+                window=int(state["window"]),
+                err_alpha=float(state["err_alpha"]),
+            )
+        self.alpha = float(state["alpha"])
+        self.err_alpha = float(state["err_alpha"])
+        self.window = int(state["window"])
+        self._steps = int(state["steps"])
+        self._erasure = np.asarray(state["erasure"], dtype=np.float64)
+        self._corr = float(state["corr"])
+        self._corr_steps = int(state["corr_steps"])
+        self._err = float(state["err"])
+        self._err_steps = int(state["err_steps"])
+        self._lat_rows = [
+            np.asarray(row, dtype=np.float64) for row in state["lat_rows"]
+        ]
+
+    # ------------------------------------------------------------------
+
     def _debias(self, value, steps: int):
         """Adam-style bias correction for the zero-initialized EW mean."""
         if steps == 0:

@@ -132,6 +132,45 @@ class AdaptiveCoder:
             deadline=self.policy.deadline,
         )
 
+    # ------------------- checkpoint serialization -------------------
+
+    def state_dict(self) -> dict:
+        """JSON-serializable controller state for checkpoint metadata:
+        estimator EW history plus the policy's operating point and
+        hysteresis clocks, so a restored controller replays the exact
+        decision sequence an uninterrupted run would have taken."""
+        return {
+            "kind": "adaptive_coder",
+            "n": self.n,
+            "blocks": self.blocks,
+            "estimator": self.estimator.state_dict(),
+            "policy": {
+                "s": self.policy.s,
+                "decoder": self.policy.decoder,
+                "deadline": self.policy.deadline,
+                "last_recode": self.policy._last_recode,
+                "last_deadline": self.policy._last_deadline,
+                "calib": dict(self.policy._calib),
+            },
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        n = int(state["n"])
+        if n != self.n:
+            self._resize(n)
+        self.estimator.load_state_dict(state["estimator"])
+        pol = state["policy"]
+        self.policy.s = int(pol["s"])
+        self.policy.decoder = str(pol["decoder"])
+        self.policy.deadline = float(pol["deadline"])
+        self.policy._last_recode = int(pol["last_recode"])
+        self.policy._last_deadline = int(pol["last_deadline"])
+        self.policy._calib.update({str(k): float(v) for k, v in pol["calib"].items()})
+        if self.policy.s not in self.policy._ladder:
+            self.policy._ladder = tuple(
+                sorted(set(self.policy._ladder) | {self.policy.s})
+            )
+
     # -------------------- the trainer protocol --------------------
 
     def observe(
@@ -174,6 +213,16 @@ class ScriptedController:
         if action is not None:
             self.actions.append((step, action))
         return action
+
+    def state_dict(self) -> dict:
+        # the plan is pure in `step`; only the applied-action log is state
+        return {
+            "kind": "scripted",
+            "actions": [[t, dataclasses.asdict(a)] for t, a in self.actions],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.actions = [(int(t), Action(**a)) for t, a in state.get("actions", [])]
 
 
 # --------------------------------------------------------------------------

@@ -65,6 +65,17 @@ class CodedDataPipeline:
         self.cfg = cfg
         self._lane_mask_cache: Dict[tuple, np.ndarray] = {}
 
+    def reshard_for(self, assignment: CodedAssignment) -> "CodedDataPipeline":
+        """Rebind the stream to a new assignment (elastic re-code / churn).
+
+        Token content is a pure function of ``(cfg.seed, step, task)``, so
+        resharding moves tasks between workers without dropping or
+        double-counting any shard: the same logical examples reappear in
+        the new layout, and a resharded pipeline at the same step yields
+        the same per-task rows as an uninterrupted one.
+        """
+        return CodedDataPipeline(assignment, self.cfg)
+
     @property
     def physical_batch(self) -> int:
         return self.asg.n * self.asg.slots * self.cfg.rows_per_slot

@@ -31,11 +31,21 @@ class FaultInjector:
         self.dead: set = set()
 
     def check(self, step: int) -> Optional[FaultPlan]:
+        """All plans scheduled for `step`, coalesced into one FaultPlan.
+
+        Multiple co-scheduled plans merge (the old code returned the
+        first match and silently dropped the rest); workers already dead
+        are filtered out so the returned plan lists only NEW deaths.
+        Returns None when nothing new dies at this step.
+        """
+        new: set = set()
         for p in self.plans:
-            if p.step == step and not set(p.workers) <= self.dead:
-                self.dead |= set(p.workers)
-                return p
-        return None
+            if p.step == step:
+                new |= set(p.workers) - self.dead
+        if not new:
+            return None
+        self.dead |= new
+        return FaultPlan(step=step, workers=tuple(sorted(new)))
 
     def alive_count(self, n0: int) -> int:
         return n0 - len(self.dead)

@@ -2,7 +2,11 @@
 
 trace (sim.traces) -> masks + step times (sim.cluster sync policies)
 -> one batched decode per run (core.engine) -> frontiers (sim.frontier).
-See docs/architecture.md §8.
+Membership change rides the same trace layer: a ``ChurnScenario`` is a
+latency trace plus worker arrival/departure events and per-worker speed
+multipliers, consumed by ``simulate_churn`` (analytic, one batched
+decode per membership epoch) and by the trainer's ``churn=`` path.
+See docs/architecture.md §8 and §11.
 """
 
 from .cluster import (  # noqa: F401
@@ -12,9 +16,11 @@ from .cluster import (  # noqa: F401
     ClusterSim,
     DeadlinePolicy,
     POLICIES,
+    RECOVERY_MODES,
     SyncPolicy,
     WaitForAll,
     make_policy,
+    simulate_churn,
     wallclock_summary,
 )
 from .frontier import (  # noqa: F401
@@ -25,8 +31,12 @@ from .frontier import (  # noqa: F401
     time_to_target_error,
 )
 from .traces import (  # noqa: F401
+    ChurnEvent,
+    ChurnScenario,
     LatencyTrace,
     TRACE_SOURCES,
+    ingest_machine_events,
+    make_churn_scenario,
     make_trace,
     trace_from_model,
 )

@@ -25,12 +25,13 @@ from ..core import decoding
 from ..core import registry
 from ..core.codes import GradientCode
 from ..core.engine import DecodeEngine
-from .traces import LatencyTrace
+from .traces import ChurnScenario, LatencyTrace
 
 __all__ = [
     "SyncPolicy", "WaitForAll", "DeadlinePolicy", "BackupPolicy",
     "AdaptiveDeadline", "make_policy", "POLICIES",
     "ClusterRunResult", "ClusterSim", "wallclock_summary",
+    "RECOVERY_MODES", "simulate_churn",
 ]
 
 
@@ -373,6 +374,145 @@ class ClusterSim:
             scheme=self.code.name, policy=self.policy.name,
             decoder=self.decoder, step_times=times, masks=masks,
             errors=dev_errors, extras=extras)
+
+
+# --------------------------------------------------------------------------
+# elastic churn: membership change through the co-simulation
+# --------------------------------------------------------------------------
+
+
+RECOVERY_MODES = ("elastic", "restart", "oblivious")
+
+
+def simulate_churn(scheme: Union[GradientCode, str],
+                   scenario: ChurnScenario,
+                   policy: Union[str, SyncPolicy] = "deadline", *,
+                   decoder: str = "onestep", s: int,
+                   recovery: str = "elastic", seed: int = 0,
+                   ckpt_every: int = 25, restart_penalty: float = 10.0,
+                   recode_penalty: float = 0.0, backend: str = "numpy",
+                   **policy_kw) -> ClusterRunResult:
+    """Co-simulate a run through a :class:`~repro.sim.traces.ChurnScenario`
+    under one of three recovery modes (the E13 comparison):
+
+      * ``elastic``  — every membership change re-codes for the new live
+        set (the paper's O(n·s) construction makes this ~free:
+        ``recode_penalty`` seconds per event, default 0) and training
+        continues.  Decoding stays batched: ONE ``decode_batch`` per
+        membership EPOCH, not per step.
+      * ``restart``  — any membership change kills the gang-scheduled
+        job: the run restores its last checkpoint (every ``ckpt_every``
+        steps), re-pays the steps since that checkpoint, plus a fixed
+        ``restart_penalty`` (scheduler + restore latency) per event.
+        Decode errors match elastic (the restarted job also gets a
+        right-sized code); only wall-clock differs.
+      * ``oblivious``— no recovery at all: the code stays sized for the
+        initial fleet, departed workers become PERMANENT stragglers
+        (latency ``inf``), and arrivals are ignored.  Decode error
+        accumulates with every departure; still one batched decode.
+
+    Per-worker heterogeneity (``scenario.speed``) scales every latency
+    row.  Use a bounded sync policy (deadline/backup): under
+    ``oblivious`` churn a wait-for-all policy would wait forever on the
+    first departure.  The result's masks are padded to capacity
+    ``n_max`` (dead/unused slots False); ``extras`` carries the live
+    count per step, the event list, epoch count, and for ``restart`` the
+    redone wall-clock.
+    """
+    if recovery not in RECOVERY_MODES:
+        raise ValueError(f"recovery {recovery!r} not in {RECOVERY_MODES}")
+    policy = make_policy(policy, **policy_kw)
+    if isinstance(scheme, GradientCode):
+        fam = registry.find(scheme.name)
+        if fam is None:
+            raise ValueError(f"code family {scheme.name!r} not registered")
+        scheme_name, params = scheme.name, dict(scheme.params)
+    else:
+        fam = registry.get(scheme)
+        scheme_name, params = scheme, {}
+    fam.require_decoder(decoder)
+    S, n_max = scenario.steps, scenario.n_max
+    masks = np.zeros((S, n_max), dtype=bool)
+    times = np.empty(S)
+    errors = np.empty(S)
+    n_live = np.empty(S, dtype=np.int64)
+    decode_calls = 0
+
+    if recovery == "oblivious":
+        n0 = scenario.n0
+        code = fam.make(k=n0, n=n0, s=min(s, n0), seed=seed, **params)
+        engine = DecodeEngine(code, backend=backend, s=code.s)
+        # departed workers never report again: inf latency from their
+        # death step on (arrivals ignored — nobody re-codes for them)
+        alive = scenario.membership()[:, :n0].copy()   # never mutate cache
+        alive = np.logical_and.accumulate(alive, axis=0)
+        lat = scenario.trace.latencies[:S, :n0] * scenario.speed[None, :n0]
+        lat = np.where(alive, lat, np.inf)
+        pmasks, times, _ = policy.apply(lat)
+        pmasks &= alive
+        errors = engine.errors_batch(pmasks, decoder) / code.k
+        decode_calls = 1
+        masks[:, :n0] = pmasks
+        n_live[:] = alive.sum(axis=1)
+        return ClusterRunResult(
+            scheme=code.name, policy=policy.name, decoder=decoder,
+            step_times=times, masks=masks, errors=errors,
+            extras={"recovery": recovery, "n_live": n_live,
+                    "events": [e.as_dict() for e in scenario.events],
+                    "epochs": 1, "decode_calls": decode_calls})
+
+    # elastic / restart: membership epochs, one code + one batched
+    # decode per epoch
+    segments = []                      # (start, stop, live_ids)
+    live = scenario.initial_ids()
+    cursor = 0
+    event_steps = sorted({e.step for e in scenario.events})
+    for es in event_steps:
+        if es > cursor:
+            segments.append((cursor, es, live))
+        for e in scenario.events_at(es):
+            live = scenario.apply_event(live, e)
+        if live.size < 2:
+            raise ValueError(f"scenario drops below 2 live workers at "
+                             f"step {es}")
+        cursor = es
+    segments.append((cursor, S, live))
+    segments = [seg for seg in segments if seg[1] > seg[0]]
+
+    for start, stop, ids in segments:
+        n_seg = ids.size
+        code = fam.make(k=n_seg, n=n_seg, s=min(s, n_seg), seed=seed,
+                        **params)
+        engine = DecodeEngine(code, backend=backend, s=code.s)
+        lat = scenario.trace.latencies[start:stop, ids] \
+            * scenario.speed[None, ids]
+        seg_masks, seg_times, _ = policy.apply(lat)
+        errors[start:stop] = engine.errors_batch(seg_masks, decoder) / code.k
+        times[start:stop] = seg_times
+        masks[start:stop][:, ids] = seg_masks
+        n_live[start:stop] = n_seg
+        decode_calls += 1
+
+    redo_total = 0.0
+    base_times = times.copy()          # penalty-free, for redo accounting
+    for es in event_steps:
+        if recovery == "elastic":
+            times[es] += recode_penalty
+        else:
+            # the job dies and restarts from its last checkpoint: the
+            # steps since it are recomputed (charged at their modelled
+            # cost) on top of the scheduler/restore latency
+            last_ckpt = (es // max(ckpt_every, 1)) * max(ckpt_every, 1)
+            redo = float(base_times[last_ckpt:es].sum())
+            times[es] += restart_penalty + redo
+            redo_total += redo
+    return ClusterRunResult(
+        scheme=scheme_name, policy=policy.name, decoder=decoder,
+        step_times=times, masks=masks, errors=errors,
+        extras={"recovery": recovery, "n_live": n_live,
+                "events": [e.as_dict() for e in scenario.events],
+                "epochs": len(segments), "decode_calls": decode_calls,
+                "redo_time": redo_total})
 
 
 # --------------------------------------------------------------------------

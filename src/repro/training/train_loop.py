@@ -15,6 +15,16 @@ Elasticity: on hard faults the worker set shrinks, the code is rebuilt
 for n' (O(n s)), the assignment/pipeline remapped, and training continues
 without losing optimizer state.
 
+Membership churn: pass ``churn=`` (a sim.traces.ChurnScenario) and worker
+arrival/departure becomes a trained-through event — departures shrink
+through the elastic path above (or, under ``recovery='restart'``, restore
+the last checkpoint onto the post-event fleet and recompute the lost
+steps), arrivals grow through the same rebuild, and the data pipeline
+reshards without dropping or double-counting a shard (the stream is pure
+in (seed, step, task)).  Checkpoints carry code/controller/churn metadata
+so a killed-then-restarted run equals an uninterrupted one
+(docs/architecture.md §11).
+
 Co-simulation hook: pass ``trace=`` (a sim.traces.LatencyTrace) and the
 trainer derives each step's straggler mask from the trace through a sync
 policy (``sync_policy=``, default a 1.5s deadline) instead of the
@@ -108,7 +118,7 @@ class CodedTrainer:
                  straggler_model: Optional[StragglerModel] = None,
                  fault_injector: Optional[FaultInjector] = None,
                  mesh=None, trace=None, sync_policy=None,
-                 controller=None):
+                 controller=None, churn=None, recovery: str = "elastic"):
         self.model = model
         self.tcfg = tcfg
         self.straggler = straggler_model or NoStragglers()
@@ -132,14 +142,46 @@ class CodedTrainer:
                     f"{tuple(getattr(mesh, 'axis_names', ()))}")
         if tcfg.staleness < 0:
             raise ValueError(f"staleness must be >= 0, got {tcfg.staleness}")
-        self.rng = np.random.default_rng(tcfg.seed)
+        # code builds draw from a counter-derived rng stream so the N-th
+        # (re)build is deterministic in (seed, N): a restored run rebuilds
+        # bit-identical codes (see maybe_restore) and an elastic/churn
+        # re-code is reproducible across trainer instances
+        self._builds = 0
         # trace-driven co-simulation (sim.cluster): trace rows -> masks +
         # modelled step times through a sync policy
         self.trace = trace
         self.sync_policy = None
         self._policy_state = None
         self.sim_time = 0.0
-        if trace is not None:
+        # membership churn (sim.traces.ChurnScenario): worker arrival /
+        # departure trained through — departures shrink-re-code (or
+        # restore a checkpoint under recovery='restart'), arrivals grow
+        self.churn = churn
+        self.recovery = recovery
+        self._live_ids = None
+        self._churn_cursor = 0
+        self.churn_log: list = []
+        if churn is not None:
+            if trace is not None:
+                raise ValueError("churn= and trace= are exclusive: a "
+                                 "ChurnScenario carries its own latency "
+                                 "trace")
+            if recovery not in ("elastic", "restart"):
+                raise ValueError(f"recovery {recovery!r} not in "
+                                 f"('elastic', 'restart')")
+            if recovery == "restart" and not (tcfg.ckpt_dir
+                                              and tcfg.ckpt_every):
+                raise ValueError("recovery='restart' needs ckpt_dir and "
+                                 "ckpt_every (restores the last checkpoint "
+                                 "on membership change)")
+            if churn.n0 != tcfg.n_workers:
+                raise ValueError(f"churn scenario starts with n0="
+                                 f"{churn.n0} workers, config has "
+                                 f"n_workers={tcfg.n_workers}")
+            self._live_ids = churn.initial_ids()
+            from ..sim.cluster import make_policy
+            self.sync_policy = make_policy(sync_policy or "deadline")
+        elif trace is not None:
             from ..sim.cluster import make_policy
             if trace.n != tcfg.n_workers:
                 raise ValueError(f"trace has n={trace.n} workers, config "
@@ -156,7 +198,7 @@ class CodedTrainer:
                         f"sync policy (its deadline is a controller "
                         f"actuator); got {type(self.sync_policy).__name__}")
         elif sync_policy is not None:
-            raise ValueError("sync_policy requires trace=")
+            raise ValueError("sync_policy requires trace= or churn=")
         self._build_code(tcfg.n_workers)
         self._step_fn = self._make_step_fn()
         self.history: list = []
@@ -167,6 +209,14 @@ class CodedTrainer:
     def _mask_and_time(self, step: int, n: int):
         """(mask, modelled step time | None) — trace-driven when a trace
         is attached, else the straggler model with no time model."""
+        if self.churn is not None:
+            # latencies of the LIVE capacity slots, speed-scaled; the
+            # policy sees an n-wide fleet whose identity churns
+            lat = self.churn.latencies_at(step, self._live_ids)
+            mask, t, self._policy_state = self.sync_policy.step(
+                lat, self._policy_state)
+            self.sim_time += t
+            return mask, t
         if self.trace is None:
             return self.straggler.sample(step, n), None
         if self._trace_masks is not None:   # dist path: precomputed schedule
@@ -187,7 +237,9 @@ class CodedTrainer:
         t = self.tcfg
         fam = REG.get(t.code)     # actionable KeyError on unknown schemes
         fam.require_decoder(t.decoder)
-        self.code = fam.make(k=n, n=n, s=min(t.s, n), rng=self.rng,
+        rng = np.random.default_rng([t.seed, 0xC0DE, self._builds])
+        self._builds += 1
+        self.code = fam.make(k=n, n=n, s=min(t.s, n), rng=rng,
                              **t.code_params)
         # one engine per live code; rebuilt (cache and all) on elastic
         # re-coding since the weights are a function of G
@@ -195,10 +247,15 @@ class CodedTrainer:
                                    cache_size=t.decode_cache_size,
                                    optimal_impl=t.optimal_impl)
         self.assignment = ASG.build_assignment(self.code)
-        self.pipeline = CodedDataPipeline(
-            self.assignment,
-            PipelineConfig(vocab=self.model.cfg.vocab, seq_len=t.seq_len,
-                           rows_per_slot=t.rows_per_slot, seed=t.seed))
+        if getattr(self, "pipeline", None) is not None:
+            # reshard: same (seed, step, task)-pure stream, new layout —
+            # no shard dropped or double-counted across the re-code
+            self.pipeline = self.pipeline.reshard_for(self.assignment)
+        else:
+            self.pipeline = CodedDataPipeline(
+                self.assignment,
+                PipelineConfig(vocab=self.model.cfg.vocab, seq_len=t.seq_len,
+                               rows_per_slot=t.rows_per_slot, seed=t.seed))
         self.allreduce = None
         self._trace_masks = self._trace_times = self._trace_weights = None
         # elastic re-code invalidation: weights decoded against the OLD
@@ -337,11 +394,110 @@ class CodedTrainer:
         return {"params": params, "opt": opt_state}
 
     def maybe_restore(self, state):
+        """Restore the latest checkpoint under ckpt_dir, if any.
+
+        Applies the checkpoint's metadata, not just its arrays: the code
+        is rebuilt at the checkpointed (family, params, s, n, decoder)
+        operating point — and at the checkpointed build counter, so the
+        rebuilt G is bit-identical to the one the interrupted run was
+        using — the churn cursor / live worker set / sim clock resume,
+        and the controller reloads its estimator state.  A restored run
+        is therefore equal to an uninterrupted one, which is what the
+        restart-recovery equivalence test asserts.
+        """
         t = self.tcfg
-        if t.ckpt_dir and latest_step(t.ckpt_dir) is not None:
-            state, meta = restore_checkpoint(t.ckpt_dir, state)
-            return state, int(meta.get("next_step", 0))
-        return state, 0
+        if not (t.ckpt_dir and latest_step(t.ckpt_dir) is not None):
+            return state, 0
+        state, meta = restore_checkpoint(t.ckpt_dir, state)
+        code_meta = meta.get("code")
+        if code_meta:
+            self.tcfg = dataclasses.replace(
+                t, code=str(code_meta["family"]),
+                code_params=dict(code_meta.get("params", {})),
+                s=int(code_meta["s"]), decoder=str(code_meta["decoder"]))
+            # rewind the build counter so the rebuild replays the exact
+            # rng draw the checkpointed code came from
+            self._builds = max(int(code_meta.get("builds", 1)) - 1, 0)
+            self._build_code(int(code_meta["n"]))
+            self._step_fn = self._make_step_fn()
+        self.sim_time = float(meta.get("sim_time", self.sim_time))
+        if self.churn is not None and "live_ids" in meta:
+            self._live_ids = np.asarray(meta["live_ids"], dtype=np.int64)
+            self._churn_cursor = int(meta.get("churn_cursor", 0))
+        ctrl_meta = meta.get("controller")
+        if ctrl_meta and hasattr(self.controller, "load_state_dict"):
+            self.controller.load_state_dict(ctrl_meta)
+        return state, int(meta.get("next_step", 0))
+
+    def _ckpt_metadata(self, next_step: int) -> dict:
+        """Everything a fresh process needs to resume equal to an
+        uninterrupted run (see maybe_restore)."""
+        live = self.tcfg
+        meta = {
+            "next_step": int(next_step),
+            "code": {"family": live.code,
+                     "params": dict(live.code_params),
+                     "s": int(self.code.s),
+                     "n": int(self.assignment.n),
+                     "decoder": live.decoder,
+                     "builds": int(self._builds)},
+            "sim_time": float(self.sim_time),
+        }
+        if self.churn is not None:
+            meta["live_ids"] = [int(i) for i in self._live_ids]
+            meta["churn_cursor"] = int(self._churn_cursor)
+        if self.controller is not None and hasattr(self.controller,
+                                                   "state_dict"):
+            meta["controller"] = self.controller.state_dict()
+        return meta
+
+    # ------------- churn events -------------
+    def _consume_churn(self, step: int, state, ckpt):
+        """Apply every scenario event scheduled at `step` (top-of-step).
+
+        The cursor is monotonic: events consumed once never reapply, so
+        a restart rewind replays *steps* (recomputing lost work on the
+        current fleet) without replaying *events*.  Departures shrink
+        the fleet — elastic re-code, or checkpoint restore + rewind
+        under recovery='restart' (gang-scheduling semantics: ANY
+        membership change restarts the job).  Arrivals grow through the
+        same rebuild path.  Returns (state, step, recoded).
+        """
+        events = self.churn.events
+        fired = []
+        while (self._churn_cursor < len(events)
+               and events[self._churn_cursor].step <= step):
+            # a restart rewind leaves the cursor PAST the triggering
+            # event, so replayed steps reach here with nothing to fire
+            fired.append(events[self._churn_cursor])
+            self._churn_cursor += 1
+        if not fired:
+            return state, step, False
+        live = self._live_ids
+        for ev in fired:
+            live = self.churn.apply_event(live, ev)
+            self.churn_log.append({"step": step, "kind": ev.kind,
+                                   "n_live": int(live.size)})
+        if live.size < 2:
+            raise RuntimeError(f"churn left {live.size} worker(s) alive at "
+                               f"step {step}; need >= 2")
+        self._live_ids = live
+        if self.recovery == "restart":
+            # the new incarnation restores the last checkpoint (or cold
+            # starts) on the post-event fleet and recomputes lost steps;
+            # the (seed, step, task)-pure pipeline makes the redo exact
+            if ckpt is not None:
+                ckpt.wait()   # in-flight saves land before we look
+            if latest_step(self.tcfg.ckpt_dir) is not None:
+                state, meta = restore_checkpoint(self.tcfg.ckpt_dir, state)
+                step = int(meta.get("next_step", 0))
+            else:
+                state = self.init_state()
+                step = 0
+            self.churn_log[-1]["restart_to"] = step
+        self._build_code(len(self._live_ids))
+        self._step_fn = self._make_step_fn()
+        return state, step, True
 
     # ------------- main loop -------------
     def run(self, state=None, start_step: int = 0,
@@ -349,14 +505,27 @@ class CodedTrainer:
         t = self.tcfg
         if state is None:
             state = self.init_state()
+        if start_step == 0:
+            # fires for explicitly-passed state too: a fresh process
+            # handed init_state() must still resume from ckpt_dir (the
+            # old `state is None` guard silently restarted from scratch)
             state, start_step = self.maybe_restore(state)
-        steps = t.steps if steps is None else steps
+            t = self.tcfg   # maybe_restore may have applied code metadata
+        # default = finish the configured job: a restored run completes
+        # the REMAINING steps (explicit steps= keeps count semantics)
+        steps = max(t.steps - start_step, 0) if steps is None else steps
         ckpt = (AsyncCheckpointer(t.ckpt_dir, t.keep_last)
                 if t.ckpt_dir and t.ckpt_every else None)
         n0 = self.assignment.n
 
+        step = start_step
+        end = start_step + steps
         with use_mesh(self.mesh):
-            for step in range(start_step, start_step + steps):
+            while step < end:
+                # --- membership churn -> elastic re-code / restart ---
+                if self.churn is not None:
+                    state, step, _ = self._consume_churn(step, state, ckpt)
+
                 # --- hard faults -> elastic re-code ---
                 plan = self.faults.check(step)
                 if plan is not None:
@@ -399,7 +568,9 @@ class CodedTrainer:
                     derr = float(((self.code.G @ w - 1.0) ** 2).sum()
                                  ) / self.code.k
                     lat = None
-                    if self.trace is not None:
+                    if self.churn is not None:
+                        lat = self.churn.latencies_at(step, self._live_ids)
+                    elif self.trace is not None:
                         lat = self.trace.latencies[step % self.trace.steps]
                         lat = lat[:mask.shape[0]]
                     self.controller.observe(step, mask, latencies=lat,
@@ -427,7 +598,7 @@ class CodedTrainer:
                         self._pending_w.append(
                             self.decode_weights_for(deferred))
 
-                if step % max(t.log_every, 1) == 0 or step == start_step + steps - 1:
+                if step % max(t.log_every, 1) == 0 or step == end - 1:
                     # read the LIVE config: controller actions may have
                     # replaced self.tcfg since the loop started
                     live = self.tcfg
@@ -452,12 +623,14 @@ class CodedTrainer:
                     self.history.append(rec)
 
                 if ckpt and t.ckpt_every and (step + 1) % t.ckpt_every == 0:
-                    ckpt.save(step + 1, state, {"next_step": step + 1})
+                    ckpt.save(step + 1, state, self._ckpt_metadata(step + 1))
+
+                step += 1
 
         if ckpt:
             ckpt.close()
         return {"state": state, "history": self.history,
-                "final_step": start_step + steps}
+                "final_step": end}
 
 
 def explicit_master_decode_grads(model: Model, params, trainer: CodedTrainer,

@@ -1,0 +1,296 @@
+"""Checkpoint layer: async-writer error handling, prune/restore round
+trips, metadata-applying restore, and the fp64 restart-recovery
+equivalence differential (docs/architecture.md §11)."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.checkpoint.checkpoint as CKPT
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _tree(x=1.0):
+    return {"a": np.full((3,), x), "b": {"c": np.full((2, 2), 2 * x)}}
+
+
+# ==========================================================================
+# AsyncCheckpointer: stale errors + thread lifecycle (regression)
+# ==========================================================================
+
+
+class TestAsyncCheckpointer:
+    def test_error_surfaces_once_then_clears(self, tmp_path, monkeypatch):
+        calls = {"n": 0}
+        real = CKPT.save_checkpoint
+
+        def flaky(directory, step, tree, metadata=None, keep_last=3):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise OSError("disk full")
+            return real(directory, step, tree, metadata, keep_last)
+
+        monkeypatch.setattr(CKPT, "save_checkpoint", flaky)
+        ck = AsyncCheckpointer(str(tmp_path))
+        ck.save(1, _tree())
+        with pytest.raises(OSError, match="disk full"):
+            ck.wait()
+        # the old code replayed the same stale exception on every later
+        # save()/wait(), wedging checkpointing for the rest of the run
+        ck.save(2, _tree())
+        ck.wait()  # must NOT re-raise the step-1 failure
+        assert latest_step(str(tmp_path)) == 2
+        ck.close()
+        assert not ck._thread.is_alive()
+
+    def test_close_joins_thread_even_when_wait_raises(self, tmp_path,
+                                                      monkeypatch):
+        def broken(directory, step, tree, metadata=None, keep_last=3):
+            raise RuntimeError("boom")
+
+        monkeypatch.setattr(CKPT, "save_checkpoint", broken)
+        ck = AsyncCheckpointer(str(tmp_path))
+        ck.save(1, _tree())
+        with pytest.raises(RuntimeError, match="boom"):
+            ck.close()
+        # the old close() leaked the daemon worker when wait() raised
+        deadline = time.time() + 10
+        while ck._thread.is_alive() and time.time() < deadline:
+            time.sleep(0.01)
+        assert not ck._thread.is_alive()
+
+    def test_async_matches_sync(self, tmp_path):
+        ck = AsyncCheckpointer(str(tmp_path), keep_last=2)
+        for step in (1, 2, 3):
+            ck.save(step, _tree(step), {"next_step": step})
+        ck.close()
+        tree, meta = restore_checkpoint(str(tmp_path), _tree())
+        assert meta["next_step"] == 3
+        assert np.array_equal(tree["a"], np.full((3,), 3.0))
+
+    def test_worker_is_single_thread(self, tmp_path):
+        before = threading.active_count()
+        ck = AsyncCheckpointer(str(tmp_path))
+        ck.close()
+        deadline = time.time() + 10
+        while threading.active_count() > before and time.time() < deadline:
+            time.sleep(0.01)
+        assert threading.active_count() <= before
+
+
+# ==========================================================================
+# save -> prune -> restore round trips
+# ==========================================================================
+
+
+class TestSaveRestore:
+    def test_keep_last_prunes(self, tmp_path):
+        d = str(tmp_path)
+        for step in range(1, 6):
+            save_checkpoint(d, step, _tree(step), keep_last=2)
+        kept = sorted(p.name for p in tmp_path.iterdir())
+        assert kept == ["step_00000004", "step_00000005"]
+        tree, _ = restore_checkpoint(d, _tree())
+        assert np.array_equal(tree["a"], np.full((3,), 5.0))
+        # an explicitly requested pruned step is a clean miss
+        with pytest.raises(FileNotFoundError):
+            restore_checkpoint(d, _tree(), step=1)
+
+    def test_latest_step_ignores_foreign_entries(self, tmp_path):
+        d = str(tmp_path)
+        save_checkpoint(d, 7, _tree())
+        # junk a restore must not trip over: editor droppings, partial
+        # copies, non-numeric step_* names (the old int() call raised)
+        (tmp_path / "step_backup").mkdir()
+        (tmp_path / "step_00000009.tmp").mkdir()
+        (tmp_path / "notes.txt").write_text("hi")
+        assert latest_step(d) == 7
+        tree, _ = restore_checkpoint(d, _tree())
+        assert np.array_equal(tree["b"]["c"], np.full((2, 2), 2.0))
+
+    def test_empty_dir(self, tmp_path):
+        assert latest_step(str(tmp_path)) is None
+        assert latest_step(str(tmp_path / "missing")) is None
+        with pytest.raises(FileNotFoundError):
+            restore_checkpoint(str(tmp_path), _tree())
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        d = str(tmp_path)
+        save_checkpoint(d, 1, _tree())
+        with pytest.raises(ValueError, match="mismatch"):
+            restore_checkpoint(d, {"other": np.zeros(2)})
+
+
+# ==========================================================================
+# Controller serialization (checkpoint metadata payload)
+# ==========================================================================
+
+
+class TestControllerStateDict:
+    def test_estimator_roundtrip(self):
+        from repro.control.estimator import StragglerEstimator
+
+        rng = np.random.default_rng(0)
+        est = StragglerEstimator(8, alpha=0.2, blocks=4, window=16)
+        for t in range(40):
+            mask = rng.random(8) > 0.2
+            est.update(mask, latencies=rng.random(8) + 0.5,
+                       decode_err=float(rng.random() * 0.1))
+        clone = StragglerEstimator(8)
+        clone.load_state_dict(est.state_dict())
+        a, b = est.state(), clone.state()
+        assert a.steps == b.steps
+        assert np.allclose(a.erasure, b.erasure)
+        assert a.block_corr == b.block_corr
+        assert a.err_ew == b.err_ew
+        assert a.quantiles == b.quantiles
+
+    def test_adaptive_coder_roundtrip_decides_identically(self):
+        from repro.control import AdaptiveCoder
+
+        rng = np.random.default_rng(1)
+        def feed(coder, lo, hi):
+            for t in range(lo, hi):
+                coder.decide(t)
+                mask = rng.random(16) > 0.3
+                coder.observe(t, mask, latencies=rng.random(16) + 0.5,
+                              decode_err=float(rng.random() * 0.2))
+
+        a = AdaptiveCoder("bgc", 16, s=4)
+        feed(a, 0, 60)
+        snap = a.state_dict()
+        b = AdaptiveCoder("bgc", 16, s=4)
+        b.load_state_dict(snap)
+        assert (b.s, b.decoder, b.deadline) == (a.s, a.decoder, a.deadline)
+        # identical observations after the snapshot -> identical actions
+        rng_a, rng_b = (np.random.default_rng(9) for _ in range(2))
+        for t in range(60, 120):
+            act_a, act_b = a.decide(t), b.decide(t)
+            assert (act_a is None) == (act_b is None)
+            if act_a is not None:
+                assert (act_a.kind, act_a.value) == (act_b.kind, act_b.value)
+            mask = rng_a.random(16) > 0.3
+            lat = rng_b.random(16) + 0.5
+            a.observe(t, mask, latencies=lat)
+            b.observe(t, mask, latencies=lat)
+
+    def test_scripted_controller_roundtrip(self):
+        from repro.control import ScriptedController
+        from repro.control.policy import Action
+
+        sc = ScriptedController({5: Action("set_s", 3)})
+        sc.decide(4)
+        sc.decide(5)
+        clone = ScriptedController({5: Action("set_s", 3)})
+        clone.load_state_dict(sc.state_dict())
+        assert clone.actions == sc.actions
+
+
+# ==========================================================================
+# Trainer restore semantics (slow: jitted training)
+# ==========================================================================
+
+
+@pytest.mark.slow
+class TestTrainerRestore:
+    def _make(self, d, **kw):
+        from repro import configs as CFG
+        from repro.models import build_model
+        from repro.optim import OptConfig
+        from repro.training import CodedTrainConfig, CodedTrainer
+
+        model = build_model(CFG.get_config("minicpm-2b", smoke=True))
+        tcfg = CodedTrainConfig(
+            code="bgc", n_workers=8, s=2, steps=9, seq_len=8, seed=0,
+            opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=50),
+            log_every=1, ckpt_dir=str(d), ckpt_every=3, **kw)
+        return CodedTrainer(model, tcfg)
+
+    def test_restore_fires_with_explicit_state(self, tmp_path):
+        # regression: maybe_restore only fired when state was None, so
+        # run(state=init_state()) silently restarted from scratch
+        tr1 = self._make(tmp_path)
+        out1 = tr1.run()
+        tr2 = self._make(tmp_path)
+        out2 = tr2.run(state=tr2.init_state())   # explicit state, step 0
+        # the whole job is already done: the restore was applied (the
+        # old behavior would have re-trained all 9 steps from scratch)
+        assert out2["history"] == []
+        assert out2["final_step"] == 9
+
+    def test_restore_resumes_at_next_step(self, tmp_path):
+        tr1 = self._make(tmp_path)
+        tr1.run(steps=7)  # ckpts at 3, 6
+        tr2 = self._make(tmp_path)
+        out = tr2.run()
+        assert out["history"][0]["step"] == 6
+        assert out["history"][-1]["step"] == 8
+        assert out["final_step"] == 9
+
+    def test_restore_applies_code_metadata(self, tmp_path):
+        # a checkpoint taken at a different operating point (s raised by
+        # a controller, say) must restore at THAT point, not the config
+        # default
+        import dataclasses as dc
+
+        tr1 = self._make(tmp_path)
+        tr1.tcfg = dc.replace(tr1.tcfg, s=4)
+        tr1._build_code(8)
+        tr1._step_fn = tr1._make_step_fn()
+        tr1.run(state=tr1.init_state(), start_step=0, steps=3)
+        tr2 = self._make(tmp_path)          # config says s=2
+        state, start = tr2.maybe_restore(tr2.init_state())
+        assert start == 3
+        assert tr2.code.s == 4              # metadata won
+        assert tr2.tcfg.s == 4
+
+
+@pytest.mark.slow
+def test_restore_equivalence_fp64_8dev():
+    """Killed-then-restarted == uninterrupted at fp64 on 8 host devices:
+    per-step mean_ce stream and final params bitwise through a churn
+    scenario (preempt + scale_up), via checkpoint metadata alone."""
+    pytest.importorskip("jax")
+    from test_coded_allreduce import _TOY_MODEL, _run_subprocess
+
+    body = """
+    import tempfile
+    from repro.optim import OptConfig
+    from repro.sim import make_churn_scenario
+    from repro.training import CodedTrainConfig, CodedTrainer
+
+    scn = make_churn_scenario("bimodal", steps=18, n0=8, preempt_rate=0.15,
+                              scaleup_rate=0.08, min_workers=3, seed=11)
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+
+    def cfg(d):
+        return CodedTrainConfig(code="bgc", n_workers=8, s=2, steps=18,
+                                seq_len=16, seed=0, opt=opt, log_every=1,
+                                ckpt_dir=d, ckpt_every=5)
+
+    with tempfile.TemporaryDirectory() as d_ref:
+        ref = CodedTrainer(ToyModel(), cfg(d_ref), churn=scn)
+        out_ref = ref.run()
+    with tempfile.TemporaryDirectory() as d:
+        first = CodedTrainer(ToyModel(), cfg(d), churn=scn)
+        first.run(steps=12)                      # killed at step 12
+        resumed = CodedTrainer(ToyModel(), cfg(d), churn=scn)
+        out_res = resumed.run()                  # restores at 10, finishes
+
+    ce_ref = {r["step"]: r["mean_ce"] for r in out_ref["history"]}
+    ce_gap = max(abs(ce_ref[r["step"]] - r["mean_ce"])
+                 for r in out_res["history"])
+    p_gap = float(np.abs(flat(out_ref["state"]["params"])
+                         - flat(out_res["state"]["params"])).max())
+    print("RESULT:" + json.dumps({
+        "resumed_from": out_res["history"][0]["step"],
+        "events": len(scn.events), "ce_gap": ce_gap, "p_gap": p_gap}))
+    """
+    res = _run_subprocess(body, prelude=_TOY_MODEL)
+    assert res["events"] >= 1           # churn actually happened
+    assert res["resumed_from"] == 10    # restored, not cold-started
+    assert res["ce_gap"] == 0.0         # fp64 bitwise, not just close
+    assert res["p_gap"] == 0.0

@@ -1,0 +1,325 @@
+"""Membership churn: fault coalescing, scenario generation/replay,
+external-trace ingestion, simulate_churn recovery modes, and the
+trainer's churn + restart-recovery paths (docs/architecture.md §11)."""
+
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.codes import block_ids
+from repro.runtime import FaultInjector, FaultPlan
+from repro.sim import (ChurnEvent, ChurnScenario, RECOVERY_MODES,
+                       ingest_machine_events, make_churn_scenario,
+                       simulate_churn, time_to_target_error)
+
+SAMPLE_CSV = (Path(__file__).resolve().parent.parent
+              / "benchmarks" / "data" / "machine_events_sample.csv")
+
+
+# ==========================================================================
+# FaultInjector.check: co-scheduled plans coalesce (regression)
+# ==========================================================================
+
+
+class TestFaultCoalescing:
+    def test_two_plans_same_step_merge(self):
+        # the old check() returned the first match and silently dropped
+        # the second plan scheduled for the same step
+        fi = FaultInjector([FaultPlan(step=3, workers=(1,)),
+                            FaultPlan(step=3, workers=(4, 5))])
+        plan = fi.check(3)
+        assert plan is not None
+        assert plan.workers == (1, 4, 5)
+        assert fi.dead == {1, 4, 5}
+        assert fi.alive_count(8) == 5
+
+    def test_already_dead_filtered(self):
+        fi = FaultInjector([FaultPlan(step=1, workers=(2,)),
+                            FaultPlan(step=5, workers=(2, 3))])
+        assert fi.check(1).workers == (2,)
+        # worker 2 is already dead at step 5: only the NEW death reports
+        assert fi.check(5).workers == (3,)
+
+    def test_none_when_nothing_new(self):
+        fi = FaultInjector([FaultPlan(step=2, workers=(0,))])
+        assert fi.check(1) is None
+        assert fi.check(2).workers == (0,)
+        # fully-duplicate plan at a later step coalesces to nothing
+        fi.plans.append(FaultPlan(step=7, workers=(0,)))
+        assert fi.check(7) is None
+
+
+# ==========================================================================
+# ChurnEvent / ChurnScenario
+# ==========================================================================
+
+
+class TestChurnScenario:
+    def test_event_validation(self):
+        with pytest.raises(ValueError):
+            ChurnEvent(step=0, kind="nope")
+        with pytest.raises(ValueError):
+            ChurnEvent(step=-1, kind="preempt", workers=(0,))
+        with pytest.raises(ValueError):
+            ChurnEvent(step=0, kind="preempt", workers=())
+        with pytest.raises(ValueError):
+            ChurnEvent(step=0, kind="scale_up", count=0)
+
+    def test_generator_deterministic_in_seed(self):
+        a = make_churn_scenario("bimodal", steps=120, n0=16, seed=9,
+                                preempt_rate=0.1, scaleup_rate=0.05)
+        b = make_churn_scenario("bimodal", steps=120, n0=16, seed=9,
+                                preempt_rate=0.1, scaleup_rate=0.05)
+        c = make_churn_scenario("bimodal", steps=120, n0=16, seed=10,
+                                preempt_rate=0.1, scaleup_rate=0.05)
+        assert a.events == b.events
+        assert np.array_equal(a.speed, b.speed)
+        assert np.array_equal(a.trace.latencies, b.trace.latencies)
+        assert a.events != c.events  # and the process actually varies
+
+    def test_generator_bounds(self):
+        scn = make_churn_scenario("bimodal", steps=300, n0=16, seed=3,
+                                  preempt_rate=0.2, preempt_max=4,
+                                  scaleup_rate=0.1, scaleup_max=4,
+                                  min_workers=6)
+        counts = scn.membership().sum(axis=1)
+        assert counts.min() >= 6
+        assert counts.max() <= scn.n_max
+        # at most one event per step by construction
+        steps = [e.step for e in scn.events]
+        assert len(steps) == len(set(steps))
+        assert scn.speed.min() > 0
+
+    def test_block_preemption_aligns_to_block_ids(self):
+        scn = make_churn_scenario("bimodal", steps=400, n0=16, seed=1,
+                                  preempt_rate=0.0, block_rate=0.08,
+                                  blocks=4, min_workers=4)
+        blk_events = [e for e in scn.events if e.kind == "preempt_block"]
+        assert blk_events, "block_rate=0.08 over 400 steps produced none"
+        live = scn.initial_ids()
+        for ev in scn.events:
+            if ev.kind == "preempt_block":
+                # victims are one block of the CURRENT live set under the
+                # shared block_ids partition (the sbm/clustered one)
+                assert set(ev.workers) <= set(int(x) for x in live)
+                member = block_ids(live.size, 4)
+                pos = np.searchsorted(live, sorted(ev.workers))
+                assert len(set(member[pos])) == 1
+            live = scn.apply_event(live, ev)
+
+    def test_apply_event_semantics(self):
+        scn = make_churn_scenario("bimodal", steps=10, n0=4, n_max=6, seed=0,
+                                  preempt_rate=0.0, scaleup_rate=0.0)
+        live = scn.initial_ids()
+        # preempt ignores already-dead slots (replayed external traces
+        # may double-report removals)
+        live = scn.apply_event(live, ChurnEvent(0, "preempt", workers=(1, 5)))
+        assert live.tolist() == [0, 2, 3]
+        # scale_up takes the lowest inactive slots, clamped at capacity
+        live = scn.apply_event(live, ChurnEvent(1, "scale_up", count=99))
+        assert live.tolist() == [0, 1, 2, 3, 4, 5]
+
+    def test_json_roundtrip(self, tmp_path):
+        scn = make_churn_scenario("bimodal", steps=60, n0=8, seed=4,
+                                  preempt_rate=0.1, scaleup_rate=0.05,
+                                  speed_sigma=0.2)
+        p = tmp_path / "scenario.json"
+        scn.save(p)
+        back = ChurnScenario.load(p)
+        assert back.events == scn.events
+        assert back.n0 == scn.n0
+        assert np.array_equal(back.speed, scn.speed)
+        assert np.array_equal(back.trace.latencies, scn.trace.latencies)
+        assert np.array_equal(back.membership(), scn.membership())
+
+    def test_latencies_at_speed_scaled(self):
+        scn = make_churn_scenario("bimodal", steps=20, n0=8, seed=2,
+                                  speed_sigma=0.5, preempt_rate=0.0)
+        ids = np.array([1, 4, 6])
+        lat = scn.latencies_at(3, ids)
+        expect = scn.trace.latencies[3, ids] * scn.speed[ids]
+        assert np.allclose(lat, expect)
+
+
+# ==========================================================================
+# External machine_events ingestion (the committed sample)
+# ==========================================================================
+
+
+class TestIngestion:
+    def test_sample_ingests(self):
+        scn = ingest_machine_events(SAMPLE_CSV, bin_seconds=300.0, seed=0)
+        assert scn.n0 == 16          # ADDs at timestamp 0
+        assert scn.n_max == 22       # + 6 machines added later
+        assert len(scn.events) > 0
+        kinds = {e.kind for e in scn.events}
+        assert kinds <= {"preempt", "scale_up"}  # UPDATE rows ignored
+        # REMOVEs never push the fleet below min_workers
+        assert scn.membership().sum(axis=1).min() >= 2
+
+    def test_sample_deterministic(self):
+        a = ingest_machine_events(SAMPLE_CSV, seed=0)
+        b = ingest_machine_events(SAMPLE_CSV, seed=0)
+        assert a.events == b.events
+        assert np.array_equal(a.trace.latencies, b.trace.latencies)
+
+    def test_sample_replays_through_simulate_churn(self):
+        scn = ingest_machine_events(SAMPLE_CSV, seed=0)
+        res = simulate_churn("bgc", scn, "deadline", decoder="onestep",
+                             s=4, recovery="elastic")
+        assert res.masks.shape == (scn.steps, scn.n_max)
+        assert np.isfinite(time_to_target_error(res))
+
+
+# ==========================================================================
+# simulate_churn: the three recovery modes
+# ==========================================================================
+
+
+class TestSimulateChurn:
+    def _storm(self, seed=7):
+        # the E13 bench storm: long enough that oblivious's accumulated
+        # dead fleet dominates restart's redo cost (at ~200 steps the
+        # ordering's tail flips — benchmarks/elastic_churn.py uses 300)
+        return make_churn_scenario("bimodal", steps=300, n0=32, seed=seed,
+                                   preempt_rate=0.08, preempt_max=3,
+                                   block_rate=0.02, scaleup_rate=0.03,
+                                   speed_sigma=0.3, min_workers=8)
+
+    def test_modes_run_and_order(self):
+        scn = self._storm()
+        tts = {}
+        for mode in RECOVERY_MODES:
+            res = simulate_churn("bgc", scn, "deadline", decoder="onestep",
+                                 s=6, recovery=mode, ckpt_every=10,
+                                 restart_penalty=10.0)
+            assert res.step_times.shape == (scn.steps,)
+            tts[mode] = time_to_target_error(res)
+        # the E13 gate's ordering on a storm heavy enough to matter
+        assert tts["elastic"] <= tts["restart"] <= tts["oblivious"]
+
+    def test_one_decode_per_epoch(self):
+        scn = self._storm()
+        res = simulate_churn("bgc", scn, "deadline", decoder="onestep",
+                             s=6, recovery="elastic")
+        assert res.extras["decode_calls"] == res.extras["epochs"]
+        assert res.extras["epochs"] == len(scn.events) + 1
+
+    def test_oblivious_single_decode_and_monotone_death(self):
+        scn = self._storm()
+        res = simulate_churn("bgc", scn, "deadline", decoder="onestep",
+                             s=6, recovery="oblivious")
+        assert res.extras["decode_calls"] == 1
+        # once a worker departs it never returns under the fixed code:
+        # the live count is non-increasing even though the scenario has
+        # scale_up events (arrivals are ignored without a re-code)
+        n_live = np.asarray(res.extras["n_live"])
+        assert (np.diff(n_live) <= 0).all()
+        assert any(e.kind == "scale_up" for e in scn.events)
+
+    def test_restart_charges_redo(self):
+        scn = self._storm()
+        el = simulate_churn("bgc", scn, "deadline", decoder="onestep",
+                            s=6, recovery="elastic")
+        rs = simulate_churn("bgc", scn, "deadline", decoder="onestep",
+                            s=6, recovery="restart", ckpt_every=10,
+                            restart_penalty=10.0)
+        assert rs.extras["redo_time"] > 0
+        assert rs.total_time > el.total_time
+        # identical membership trajectory -> identical decode errors
+        assert np.allclose(el.errors, rs.errors)
+
+    def test_membership_cache_not_mutated(self):
+        # regression: the oblivious branch must not write through the
+        # scenario's cached membership() array
+        scn = self._storm()
+        before = scn.membership().copy()
+        simulate_churn("bgc", scn, "deadline", decoder="onestep",
+                       s=6, recovery="oblivious")
+        assert np.array_equal(scn.membership(), before)
+
+    def test_unknown_recovery_rejected(self):
+        scn = self._storm()
+        with pytest.raises(ValueError):
+            simulate_churn("bgc", scn, "deadline", decoder="onestep",
+                           s=6, recovery="magic")
+
+
+# ==========================================================================
+# Trainer: churn consumed end to end (slow: jitted training)
+# ==========================================================================
+
+
+@pytest.mark.slow
+class TestTrainerChurn:
+    def _setup(self, tmp_path=None, steps=24, recovery="elastic"):
+        from repro import configs as CFG
+        from repro.models import build_model
+        from repro.optim import OptConfig
+        from repro.training import CodedTrainConfig, CodedTrainer
+
+        model = build_model(CFG.get_config("minicpm-2b", smoke=True))
+        scn = make_churn_scenario("bimodal", steps=steps, n0=8,
+                                  preempt_rate=0.12, scaleup_rate=0.06,
+                                  min_workers=3, seed=11)
+        kw = {}
+        if tmp_path is not None:
+            kw = dict(ckpt_dir=str(tmp_path), ckpt_every=6)
+        tcfg = CodedTrainConfig(
+            code="bgc", n_workers=8, s=2, steps=steps, seq_len=8, seed=0,
+            opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=50),
+            log_every=1, **kw)
+        return model, scn, tcfg, CodedTrainer(
+            model, tcfg, churn=scn, recovery=recovery)
+
+    def test_elastic_trains_through_events(self):
+        _, scn, _, tr = self._setup()
+        out = tr.run()
+        assert len(tr.churn_log) == len(
+            [e for e in scn.events if e.step < 24])
+        assert tr.assignment.n == tr.churn_log[-1]["n_live"]
+        assert all(np.isfinite(h["mean_ce"]) for h in out["history"])
+        # the fleet the trainer ends on matches the scenario's replay
+        assert tr.assignment.n == int(scn.membership()[23].sum())
+
+    def test_restart_recovery_rewinds(self, tmp_path):
+        _, scn, _, tr = self._setup(tmp_path, recovery="restart")
+        out = tr.run()
+        rewinds = [r for r in tr.churn_log if "restart_to" in r]
+        assert rewinds, "no membership event triggered a restart"
+        assert all(np.isfinite(h["mean_ce"]) for h in out["history"])
+
+    def test_killed_then_restarted_equals_uninterrupted(self, tmp_path):
+        from repro.training import CodedTrainer
+
+        model, scn, tcfg, ref = self._setup(tmp_path / "ref")
+        out_ref = ref.run()
+        ce_ref = {r["step"]: r["mean_ce"] for r in out_ref["history"]}
+
+        model2, scn2, tcfg2, first = self._setup(tmp_path / "kill")
+        first.run(steps=15)  # "killed" mid-run; ckpts stay on disk
+        resumed = CodedTrainer(model2, tcfg2, churn=scn2, recovery="elastic")
+        out_res = resumed.run()  # fresh trainer resumes + finishes the job
+        assert out_res["history"][0]["step"] == 12  # restored, not cold
+        for r in out_res["history"]:
+            assert ce_ref[r["step"]] == r["mean_ce"]
+
+    def test_churn_excludes_trace(self):
+        from repro import configs as CFG
+        from repro.models import build_model
+        from repro.training import CodedTrainConfig, CodedTrainer
+        from repro.sim import make_trace
+
+        model = build_model(CFG.get_config("minicpm-2b", smoke=True))
+        scn = make_churn_scenario("bimodal", steps=8, n0=8, seed=0)
+        trace = make_trace("bimodal", steps=8, n=8, seed=0)
+        with pytest.raises(ValueError, match="exclusive"):
+            CodedTrainer(model, CodedTrainConfig(n_workers=8, steps=8),
+                         churn=scn, trace=trace)
+        with pytest.raises(ValueError, match="restart"):
+            CodedTrainer(model, CodedTrainConfig(n_workers=8, steps=8),
+                         churn=scn, recovery="restart")  # no ckpt_dir
+        with pytest.raises(ValueError, match="n0"):
+            CodedTrainer(model, CodedTrainConfig(n_workers=4, steps=8),
+                         churn=scn)

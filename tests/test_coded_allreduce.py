@@ -680,11 +680,15 @@ def test_ragged_workers_metrics_match_fused_8_devices():
 #   PYTHONPATH=src python -m pytest tests/test_coded_allreduce.py \
 #       -k golden_convergence -q  # prints got-vs-want on failure
 # or run the trainer snippet from this test and paste the new values.
+# (Re-pinned when code builds moved to the counter-derived rng stream
+# default_rng([seed, 0xC0DE, builds]) for checkpoint-exact rebuilds:
+# frc's column permutation drew differently — permutation-invariant
+# statistically, verified against the fp64 differentials.)
 GOLDEN_DIST_MEAN_CE = [
-    6.23709774017334, 6.2165679931640625, 6.191111087799072,
-    6.188775062561035, 6.151763916015625, 6.099928855895996,
-    6.039772033691406, 6.009371757507324, 5.981381893157959,
-    5.908316612243652,
+    6.23709774017334, 6.216646194458008, 6.194518566131592,
+    6.189853668212891, 6.147739410400391, 6.091350078582764,
+    6.030529022216797, 6.0014448165893555, 5.978209495544434,
+    5.885657787322998,
 ]
 GOLDEN_DIST_SIM_TIME = 14.617005584431038
 
