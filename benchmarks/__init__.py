@@ -1,0 +1,19 @@
+"""Benchmark harness package.
+
+Importing this package (``python -m benchmarks.<bench>``) applies the
+REPRO_* device-world env (platform / host devices / x64) through
+``repro.platform.configure_from_env()`` BEFORE any benchmark module
+imports jax — the same bootstrap tests get from tests/conftest.py, and
+the way the CI bench lane exports its world (``REPRO_PLATFORM: cpu``)
+without hand-rolled jax env strings.  Pre-set env still wins verbatim.
+
+``check_regression`` runs without PYTHONPATH=src (it never imports
+repro), so a missing repro package is silently fine here.
+"""
+
+try:  # pragma: no cover - repro needs PYTHONPATH=src or a pip install
+    from repro.platform import configure_from_env
+except ImportError:  # pragma: no cover
+    pass
+else:
+    configure_from_env()

@@ -5,6 +5,15 @@ committed baselines in ``benchmarks/baselines/`` and fails (exit 1)
 when any tracked throughput metric regresses by more than the
 tolerance (default 25%).
 
+Baselines are keyed PER BACKEND: each committed file stores
+``{"metrics": {"cpu": {...}, "tpu-v5e": {...}}}`` and every artifact
+carries the ``backend`` key of the machine that produced it
+(``repro.platform.backend_key()``, injected by ``common.save_json``).
+The gate only compares a run against its own backend's baselines; a
+backend with no committed baselines is reported informationally and
+NEVER fails the lane (pin it with ``--update`` on that machine to
+start gating it).
+
 Only MACHINE-NORMALIZED metrics are compared: every tracked metric is a
 speedup ratio (batched path vs reference loop, measured in the same
 process on the same machine), so a slower CI runner shifts both sides
@@ -24,9 +33,9 @@ several runs into a conservative floor:
     # ... re-run the benchmarks a couple more times, then after each:
     python -m benchmarks.check_regression --update --keep-min
 
-``--update`` alone replaces the baselines with the current run;
-``--keep-min`` keeps the smaller of (baseline, current) per metric.
-The CI check itself:
+``--update`` alone replaces the current backend's baselines with the
+current run (other backends' pins are preserved); ``--keep-min`` keeps
+the smaller of (baseline, current) per metric.  The CI check itself:
 
     python -m benchmarks.check_regression [--tolerance 0.25]
 """
@@ -112,8 +121,24 @@ def _load(path: Path) -> dict:
         return json.load(fh)
 
 
+def _artifact_backend(payload: dict) -> str:
+    # artifacts carry the backend_key() of the machine that produced
+    # them (injected by common.save_json); pre-redesign artifacts are
+    # CPU by construction
+    return str(payload.get("backend", "cpu"))
+
+
 def _load_baseline(stem: str) -> dict:
-    return _load(BASELINES / f"{stem}.json")["metrics"]
+    """{backend: {metric: speedup}} for one benchmark's committed pin.
+
+    Pre-redesign flat files ({metric: float}) are read as CPU pins so a
+    stale checkout degrades gracefully.
+    """
+    metrics = _load(BASELINES / f"{stem}.json")["metrics"]
+    if metrics and all(isinstance(v, (int, float))
+                       for v in metrics.values()):
+        return {"cpu": metrics}
+    return metrics
 
 
 def update_baselines(keep_min: bool) -> int:
@@ -123,17 +148,22 @@ def update_baselines(keep_min: bool) -> int:
         if not src.exists():
             print(f"missing {src}; run the benchmark first", file=sys.stderr)
             return 1
-        metrics = extractor(_load(src))
+        payload = _load(src)
+        backend = _artifact_backend(payload)
+        metrics = extractor(payload)
         dst = BASELINES / f"{stem}.json"
-        merged = keep_min and dst.exists()
+        by_backend = _load_baseline(stem) if dst.exists() else {}
+        merged = keep_min and backend in by_backend
         if merged:
-            old = _load_baseline(stem)
+            old = by_backend[backend]
             for key in metrics:
                 if key in old:
                     metrics[key] = min(metrics[key], old[key])
-        payload = {"benchmark": stem, "description": desc, "metrics": metrics}
-        dst.write_text(json.dumps(payload, indent=1) + "\n")
-        print(f"{'min-merged' if merged else 'pinned'} {dst}")
+        by_backend[backend] = metrics
+        out = {"benchmark": stem, "description": desc,
+               "metrics": {k: by_backend[k] for k in sorted(by_backend)}}
+        dst.write_text(json.dumps(out, indent=1) + "\n")
+        print(f"{'min-merged' if merged else 'pinned'} {dst} [{backend}]")
     return 0
 
 
@@ -144,10 +174,18 @@ def _check_one(stem: str, desc: str, extractor, tolerance: float) -> list:
         return [f"{stem}: no current artifact at {current_path}"]
     if not baseline_path.exists():
         return [f"{stem}: no baseline at {baseline_path} (pin with --update)"]
-    current = extractor(_load(current_path))
-    baseline = _load_baseline(stem)
+    payload = _load(current_path)
+    backend = _artifact_backend(payload)
+    current = extractor(payload)
+    by_backend = _load_baseline(stem)
+    baseline = by_backend.get(backend)
+    if baseline is None:
+        print(f"{stem} ({desc}): no committed baselines for backend "
+              f"{backend!r} (have {sorted(by_backend)}) — informational "
+              f"only; pin with --update on this machine to start gating")
+        return []
     failures = []
-    print(f"{stem} ({desc}):")
+    print(f"{stem} ({desc}) [{backend}]:")
     for metric, base in sorted(baseline.items()):
         now = current.get(metric)
         if now is None:

@@ -11,9 +11,25 @@ from typing import Any, Dict, List, Sequence
 ART = Path("artifacts/bench")
 
 
+def bench_backend() -> str:
+    """The backend key this run's numbers belong to ("cpu", "tpu-v5e"...).
+
+    check_regression keys its committed baselines on this, so a TPU run
+    never gates against CPU numbers.  Falls back to "cpu" when
+    repro.platform is unavailable (e.g. a stripped artifact consumer).
+    """
+    try:
+        from repro.platform import backend_key
+    except ImportError:
+        return "cpu"
+    return backend_key()
+
+
 def save_json(name: str, payload: Any) -> Path:
     ART.mkdir(parents=True, exist_ok=True)
     p = ART / f"{name}.json"
+    if isinstance(payload, dict):
+        payload.setdefault("backend", bench_backend())
 
     def default(o):
         if dataclasses.is_dataclass(o):

@@ -22,7 +22,7 @@ Two parts:
      ClusterSim.run_distributed(): the same masks decoded by the REAL
      shard_map coded all-reduce (docs/architecture.md §9) with basis
      task gradients, whose on-device errors must match the analytic
-     ones.  Run under XLA_FLAGS=--xla_force_host_platform_device_count=8
+     ones.  Run with REPRO_HOST_DEVICES=8 (repro.platform)
      for a true multi-device mesh; one device still validates the path.
 
   5. Adaptive policy column — the AdaptiveCoder closed loop

@@ -78,7 +78,8 @@ class DecodeEngine:
     def __init__(self, code: GradientCode, *, backend: str = "numpy",
                  rho: Optional[float] = None, s: Optional[int] = None,
                  ridge: float = 0.0, iters: int = 8, sparse: str = "auto",
-                 optimal_impl: str = "auto", cache_size: int = 512):
+                 optimal_impl: str = "auto", cache_size: int = 512,
+                 tiles=None):
         if backend not in _BACKENDS:
             raise ValueError(f"backend {backend!r} not in {_BACKENDS}")
         if sparse not in ("auto", "always", "never"):
@@ -104,6 +105,11 @@ class DecodeEngine:
         # given (the paper's calibration — simulate passes it), else
         # inferred from G's density exactly like decoding.onestep_weights
         self._s = s if s is not None else decoding._infer_s(code.G)
+        # kernel tile override (kernels.TileConfig or None).  None means
+        # "whatever the committed autotune table pins for the active
+        # backend" — the ops-layer default; the numpy backend never
+        # launches a kernel, so tiles are simply unused there.
+        self.tiles = tiles
         self._cache: OrderedDict = OrderedDict()
         self._cache_size = cache_size
         self.cache_hits = 0
@@ -191,11 +197,11 @@ class DecodeEngine:
             idx, val = self.code.ell()
             V = ops.batched_onestep_decode_ell(
                 jnp.asarray(idx), jnp.asarray(val), m, r,
-                impl=self.backend)
+                impl=self.backend, tiles=self.tiles)
         else:
             V = ops.batched_onestep_decode(
                 jnp.asarray(self.code.G.astype(np.float32)), m, r,
-                impl=self.backend)
+                impl=self.backend, tiles=self.tiles)
         return np.asarray(V, dtype=np.float64)
 
     def _optimal_batch(self, masks: np.ndarray) -> BatchDecode:
@@ -241,7 +247,8 @@ class DecodeEngine:
         W = np.zeros(masks.shape)
         for sl in decoding._batch_chunks(masks.shape[0], self.n, self.n):
             Mg = np.asarray(ops.batched_masked_gram(
-                gram_dev, jnp.asarray(masks[sl]), impl=self.backend))
+                gram_dev, jnp.asarray(masks[sl]), impl=self.backend,
+                tiles=self.tiles))
             W[sl] = decoding.solve_masked_gram(Mg, masks[sl], rhs0, ridge)
         return W
 
@@ -259,7 +266,7 @@ class DecodeEngine:
         U, X = ops.batched_algorithmic_decode(
             jnp.asarray(G.astype(np.float32)), jnp.asarray(masks),
             jnp.asarray(nus.astype(np.float32)), int(iters),
-            impl=self.backend, return_weights=True)
+            impl=self.backend, tiles=self.tiles, return_weights=True)
         W = np.asarray(X, dtype=np.float64) * masks
         errs = (np.asarray(U, dtype=np.float64) ** 2).sum(axis=1)
         return BatchDecode(weights=W, errors=errs)
@@ -319,7 +326,7 @@ class DecodeEngine:
         out = ops.fused_decode_apply(
             jnp.asarray(np.asarray(messages, dtype=np.float32)),
             jnp.asarray(masks), jnp.asarray(scales.astype(np.float32)),
-            impl=backend)
+            impl=backend, tiles=self.tiles)
         return np.asarray(out, dtype=np.float64)
 
     # ------------------------------------------------------------------

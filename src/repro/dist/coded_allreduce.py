@@ -365,7 +365,8 @@ class CodedAllReduce:
             if f64:   # dtype-preserving reference path (fp64 differential)
                 out = w.astype(m.dtype) @ m
             else:
-                out = ops.coded_accumulate_batched(m, w, impl=impl)
+                out = ops.coded_accumulate_batched(
+                    m, w, impl=impl, tiles=self.engine.tiles)
             return jax.lax.psum(out, ax)
 
         fn = self._shard_map(local, in_specs=(P(ax), P(ax)), out_specs=P())
@@ -408,7 +409,8 @@ class CodedAllReduce:
             if f64:   # dtype-preserving reference path (fp64 differential)
                 out = (sc[:, None] * mask_l.astype(m.dtype)) @ m
             else:
-                out = ops.fused_decode_apply(m, mask_l, sc, impl=impl)
+                out = ops.fused_decode_apply(m, mask_l, sc, impl=impl,
+                                             tiles=self.engine.tiles)
             return jax.lax.psum(out, ax)
 
         fn = self._shard_map(local, in_specs=(P(ax), P(ax)), out_specs=P())

@@ -19,6 +19,7 @@ Use via repro.kernels.ops with impl in {"xla", "pallas",
 
 from . import ops  # noqa: F401
 from . import ref  # noqa: F401
+from .tiles import DEFAULT_TILES, TileConfig  # noqa: F401
 from .algorithmic_decode import algorithmic_decode, algorithmic_iterate  # noqa: F401
 from .batched_decode import (  # noqa: F401
     batched_algorithmic_decode,

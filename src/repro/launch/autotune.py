@@ -1,0 +1,374 @@
+"""Roofline-seeded Pallas tile autotune.
+
+Closes the loop the ROADMAP called out: ``launch/roofline.py`` models
+cost but never fed kernel choices, and the kernel tile sizes were
+hand-picked constants.  This module sweeps tile candidates for the
+decode kernels and emits the committed per-(backend, kernel,
+shape-class) table in ``src/repro/kernels/tile_tables.json`` that
+``kernels.ops`` / ``DecodeEngine`` / ``CodedAllReduce`` load by default
+(see :mod:`repro.kernels.tiles`).
+
+The sweep is measurement-last, model-first:
+
+1. **Candidates** are generated per kernel by varying only the grid
+   axes marked *parallel* in the kernel's dimension semantics (bb / bp /
+   bk-of-onestep / bi / bj).  Contraction axes keep their defaults:
+   changing the contraction block regroups the fp32 accumulation and can
+   legally change the last bits of the output — and the contract here is
+   that autotuned tiles are BITWISE-identical to the defaults.
+2. **Roofline ranking** scores each candidate with the platform preset
+   from ``repro.platform.HARDWARE``:
+       cost = flops/peak + bytes/hbm_bw + grid_cells * launch_overhead
+   where the per-cell launch overhead is the term that actually differs
+   between tiles at fixed problem size (interpret mode executes the grid
+   as a host loop, so on CPU it dominates; on TPU it is ~µs).  Only the
+   top ``--top`` candidates are measured.
+3. **Measurement** is best-of-``--reps`` wall time with
+   ``block_until_ready``, after a warmup that also produces the output
+   for the bitwise check: any candidate whose output is not
+   ``np.array_equal`` to the default-tile output is rejected outright,
+   whatever its speed.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.autotune            # all kernels
+    PYTHONPATH=src python -m repro.launch.autotune \
+        --kernels fused_decode_apply batched_onestep_decode --top 4
+
+The table merges per backend key (``repro.platform.backend_key()``), so
+re-pinning on a TPU host leaves the committed CPU entries untouched.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import json
+import math
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.kernels.tiles import (DEFAULT_TILES, KERNEL_TILE_ARGS,
+                                 TILE_TABLE_PATH, TileConfig, _table_cache,
+                                 shape_class)
+from repro.platform import backend_key, resolve_hardware
+
+# per-grid-cell launch/dispatch overhead (seconds) by platform of the
+# hardware spec — the roofline term that separates tile candidates at
+# fixed problem size.  "cpu" models interpret mode's per-cell host loop.
+LAUNCH_OVERHEAD_S = {"cpu": 2e-4, "tpu": 2e-6, "gpu": 5e-6}
+
+# grid axes that are "parallel" in each kernel's dimension_semantics —
+# the only axes autotune varies (see module docstring, point 1)
+SAFE_AXES: Dict[str, Tuple[str, ...]] = {
+    "batched_onestep_decode": ("bb", "bk"),
+    "batched_onestep_decode_ell": ("bb", "bk"),
+    "batched_masked_gram": ("bb", "bi", "bj"),
+    "fused_decode_apply": ("bb", "bp"),
+    "coded_accumulate_batched": ("bb", "bp"),
+    "coded_accumulate": ("bp",),
+}
+
+
+@dataclasses.dataclass
+class Workload:
+    """One representative problem for a (kernel, shape-class) cell."""
+
+    kernel: str
+    B: Optional[int]                   # batch size (None for unbatched)
+    dims: Dict[str, int]               # tile axis -> problem dim it tiles
+    grid_axes: Tuple[str, ...]         # axes whose blocks multiply into
+                                       # the grid (incl. contraction)
+    flops: float
+    bytes: float
+    build: Callable[[np.random.Generator], tuple]   # -> jnp inputs
+    call: Callable[[tuple, TileConfig], "object"]   # -> output array
+
+
+def _workloads(k: int, B_list: Tuple[int, ...]) -> List[Workload]:
+    """The tuned cells: the E10 decode ensemble shapes (k = n) plus the
+    all-reduce accumulate at a per-device lane/param shape."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    impl = _impl()
+    out: List[Workload] = []
+
+    for B in B_list:
+        def build_onestep(rng, B=B):
+            G = rng.integers(0, 2, size=(k, k)).astype(np.float32)
+            m = (rng.random((B, k)) > 0.3).astype(np.float32)
+            r = rng.random(B).astype(np.float32) + 0.5
+            return (jnp.asarray(G), jnp.asarray(m), jnp.asarray(r))
+
+        out.append(Workload(
+            kernel="batched_onestep_decode", B=B,
+            dims={"bb": B, "bk": k, "bn": k},
+            grid_axes=("bb", "bk", "bn"),
+            flops=2.0 * B * k * k, bytes=4.0 * (B * k + k * k + B * k),
+            build=build_onestep,
+            call=lambda a, t: ops.batched_onestep_decode(
+                *a, impl=impl, tiles=t)))
+
+        def build_fused(rng, B=B):
+            msgs = rng.standard_normal((k, k)).astype(np.float32)
+            m = (rng.random((B, k)) > 0.3).astype(np.float32)
+            s = rng.random(B).astype(np.float32) + 0.5
+            return (jnp.asarray(msgs), jnp.asarray(m), jnp.asarray(s))
+
+        out.append(Workload(
+            kernel="fused_decode_apply", B=B,
+            dims={"bb": B, "bl": k, "bp": k},
+            grid_axes=("bb", "bp", "bl"),
+            flops=2.0 * B * k * k, bytes=4.0 * (k * k + B * k + B * k),
+            build=build_fused,
+            call=lambda a, t: ops.fused_decode_apply(
+                *a, impl=impl, tiles=t)))
+
+        L, P = 32, 8192    # per-device lanes x flat params
+        def build_acc(rng, B=B, L=L, P=P):
+            g = rng.standard_normal((L, P)).astype(np.float32)
+            w = rng.standard_normal((B, L)).astype(np.float32)
+            return (jnp.asarray(g), jnp.asarray(w))
+
+        out.append(Workload(
+            kernel="coded_accumulate_batched", B=B,
+            dims={"bb": B, "bk": L, "bp": P},
+            grid_axes=("bb", "bp", "bk"),
+            flops=2.0 * B * L * P, bytes=4.0 * (L * P + B * L + B * P),
+            build=build_acc,
+            call=lambda a, t: ops.coded_accumulate_batched(
+                *a, impl=impl, tiles=t)))
+
+    # the engine's gram path chunks the ensemble to ~n-row batches
+    Bg = min(max(B_list), 256)
+    def build_gram(rng, B=Bg):
+        G = rng.integers(0, 2, size=(k, k)).astype(np.float32)
+        gram = (G.T @ G).astype(np.float32)
+        m = (rng.random((B, k)) > 0.3).astype(np.float32)
+        return (jnp.asarray(gram), jnp.asarray(m))
+
+    out.append(Workload(
+        kernel="batched_masked_gram", B=Bg,
+        dims={"bb": Bg, "bi": k, "bj": k},
+        grid_axes=("bb", "bi", "bj"),
+        flops=2.0 * Bg * k * k, bytes=4.0 * (k * k + Bg * k + Bg * k * k),
+        build=build_gram,
+        call=lambda a, t: ops.batched_masked_gram(*a, impl=impl, tiles=t)))
+    return out
+
+
+def _impl() -> str:
+    """Compiled Pallas on an accelerator, interpret mode on a CPU host."""
+    from repro.platform import backend_info
+
+    return "pallas" if backend_info().platform != "cpu" \
+        else "pallas_interpret"
+
+
+# --------------------------------------------------------------------------
+# candidate generation + roofline ranking
+# --------------------------------------------------------------------------
+
+
+def _axis_candidates(axis: str, default: int, dim: int) -> List[int]:
+    """Powers of two from the default up to (and clamped at) the dim."""
+    cands = {min(default, dim), dim}
+    v = 8
+    while v < dim:
+        if v >= default // 2:      # don't bother going far below default
+            cands.add(v)
+        v *= 2
+    return sorted(c for c in cands if c > 0)
+
+
+def candidates_for(w: Workload) -> List[TileConfig]:
+    """Fully-specified tile configs varying only the kernel's safe axes.
+
+    Every candidate pins ALL of the kernel's tile args (safe-axis
+    variation merged over the historical defaults) so the committed
+    table can never inject a contraction-axis change behind our back.
+    """
+    base = DEFAULT_TILES[w.kernel]
+    axes = [a for a in SAFE_AXES[w.kernel] if a in w.dims]
+    grids = [_axis_candidates(a, getattr(base, a), w.dims[a]) for a in axes]
+    out = []
+    for combo in itertools.product(*grids):
+        out.append(base.merged(TileConfig(**dict(zip(axes, combo)))))
+    return out
+
+
+def _grid_cells(w: Workload, t: TileConfig) -> int:
+    cells = 1
+    for a in w.grid_axes:
+        blk = min(getattr(t, a), w.dims[a])
+        cells *= math.ceil(w.dims[a] / blk)
+    return cells
+
+
+def _vmem_bytes(w: Workload, t: TileConfig) -> int:
+    """fp32 footprint proxy: one block per operand axis-pair + 2 output
+    blocks (out + accumulator).  Coarse, but it culls the configs that
+    could not possibly fit the scratch budget."""
+    blocks = [min(getattr(t, a), w.dims[a]) for a in w.grid_axes]
+    total = 0
+    for x, y in itertools.combinations(blocks, 2):
+        total += x * y
+    total += 2 * blocks[0] * blocks[-1]
+    return 4 * total
+
+
+def roofline_cost(w: Workload, t: TileConfig, hw) -> float:
+    overhead = LAUNCH_OVERHEAD_S.get(hw.platform, 2e-4)
+    if _impl() == "pallas_interpret":
+        overhead = LAUNCH_OVERHEAD_S["cpu"]
+    return (w.flops / hw.peak_flops + w.bytes / hw.hbm_bw
+            + _grid_cells(w, t) * overhead)
+
+
+# --------------------------------------------------------------------------
+# measurement
+# --------------------------------------------------------------------------
+
+
+def _time_call(fn, reps: int) -> Tuple[float, np.ndarray]:
+    out = fn()
+    out = np.asarray(out.block_until_ready()
+                     if hasattr(out, "block_until_ready") else out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn()
+        if hasattr(r, "block_until_ready"):
+            r.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def tune_workload(w: Workload, *, hw, top: int, reps: int,
+                  seed: int = 0, verbose: bool = True) -> dict:
+    """Sweep one (kernel, shape-class) cell.  Returns the result record
+    (chosen tiles, timings, rejects)."""
+    rng = np.random.default_rng(seed)
+    inputs = w.build(rng)
+    default = DEFAULT_TILES[w.kernel]
+
+    cands = [c for c in candidates_for(w)
+             if _vmem_bytes(w, c) <= hw.vmem_bytes]
+    cands.sort(key=lambda c: roofline_cost(w, c, hw))
+    ranked = cands[:top]
+    if default not in ranked:
+        ranked.append(default)      # the bitwise reference always runs
+
+    t_default, ref = _time_call(lambda: w.call(inputs, default), reps)
+    rows, rejected = [], []
+    for c in ranked:
+        if c == default:
+            rows.append({"tiles": c.as_dict(), "time_s": t_default,
+                         "default": True})
+            continue
+        t, out = _time_call(lambda: w.call(inputs, c), reps)
+        if not np.array_equal(out, ref):
+            rejected.append(c.as_dict())
+            continue
+        rows.append({"tiles": c.as_dict(), "time_s": t, "default": False})
+    best = min(rows, key=lambda r: r["time_s"])
+    # table entry: only the axes that differ from the default AFTER the
+    # kernel's min(tile, dim) clamp — an axis the workload merely
+    # clamped (e.g. bp=256 because P was 256) must not pin that smaller
+    # tile onto production shapes where the default would be larger
+    entry = {a: v for a, v in best["tiles"].items()
+             if min(v, w.dims[a]) != min(getattr(default, a), w.dims[a])}
+    rec = {
+        "kernel": w.kernel, "shape_class": shape_class(w.B),
+        "dims": w.dims, "best": best["tiles"], "entry": entry,
+        "default_time_s": t_default, "best_time_s": best["time_s"],
+        "speedup_vs_default": t_default / max(best["time_s"], 1e-12),
+        "measured": rows, "rejected_bitwise": rejected,
+    }
+    if verbose:
+        print(f"  {w.kernel:28s} {rec['shape_class']:>6s}  "
+              f"best={best['tiles']}  "
+              f"{rec['speedup_vs_default']:.2f}x vs default"
+              + (f"  ({len(rejected)} rejected bitwise)" if rejected else ""))
+    return rec
+
+
+# --------------------------------------------------------------------------
+# table emission
+# --------------------------------------------------------------------------
+
+
+def write_table(records: List[dict], *, backend: str,
+                path: Optional[Path] = None) -> Path:
+    """Merge the sweep results into the committed tile table."""
+    p = Path(path) if path is not None else TILE_TABLE_PATH
+    try:
+        table = json.loads(p.read_text())
+        if not isinstance(table, dict):
+            table = {}
+    except (OSError, json.JSONDecodeError):
+        table = {}
+    slot = table.setdefault(backend, {})
+    for rec in records:
+        entry = rec.get("entry", rec["best"])
+        if not entry:               # default won: nothing to pin
+            slot.get(rec["kernel"], {}).pop(rec["shape_class"], None)
+            continue
+        slot.setdefault(rec["kernel"], {})[rec["shape_class"]] = entry
+    p.write_text(json.dumps(table, indent=1, sort_keys=True) + "\n")
+    _table_cache.clear()            # resolve() must see the new table
+    return p
+
+
+def run(kernels: Optional[List[str]] = None, *, k: int = 256,
+        batches: Tuple[int, ...] = (300, 1000), top: int = 4,
+        reps: int = 3, table_path: Optional[Path] = None,
+        write: bool = True) -> dict:
+    key = backend_key(initialize=True)
+    hw = resolve_hardware(key)
+    print(f"autotune: backend={key} impl={_impl()} "
+          f"(peak={hw.peak_flops:.3g} FLOP/s, hbm={hw.hbm_bw:.3g} B/s)")
+    work = [w for w in _workloads(k, tuple(batches))
+            if kernels is None or w.kernel in kernels]
+    if not work:
+        raise SystemExit(f"no workloads match kernels={kernels!r}; "
+                         f"tunable: {sorted(SAFE_AXES)}")
+    records = [tune_workload(w, hw=hw, top=top, reps=reps) for w in work]
+    out = {"backend": key, "records": records}
+    if write:
+        p = write_table(records, backend=key, path=table_path)
+        print(f"wrote {p}")
+        out["table"] = str(p)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--kernels", nargs="*", default=None,
+                    help=f"subset of {sorted(SAFE_AXES)} (default: all "
+                         f"with workloads)")
+    ap.add_argument("--k", type=int, default=256,
+                    help="decode cell size k = n (default 256, the E10 cell)")
+    ap.add_argument("--batches", type=int, nargs="*", default=[300, 1000],
+                    help="mask-ensemble sizes to tune (each pins its "
+                         "shape class)")
+    ap.add_argument("--top", type=int, default=4,
+                    help="measure the N roofline-best candidates")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", type=Path, default=None,
+                    help=f"table path (default {TILE_TABLE_PATH})")
+    ap.add_argument("--no-write", action="store_true",
+                    help="rank and measure only; do not touch the table")
+    args = ap.parse_args(argv)
+    run(args.kernels, k=args.k, batches=tuple(args.batches), top=args.top,
+        reps=args.reps, table_path=args.out, write=not args.no_write)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

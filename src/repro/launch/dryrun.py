@@ -1,9 +1,11 @@
 """Multi-pod dry-run: prove the distribution config is coherent.
 
-XLA_FLAGS precedence: this module needs a 512-device placeholder world
-(jax locks the host device count on first init, so the flag must be set
-before any jax import).  A caller that already exported XLA_FLAGS wins
-VERBATIM — e.g. the 8-device coded-allreduce test lane sets
+Device-world precedence: this module needs a 512-device placeholder
+world (jax locks the host device count on first init, so it must be
+configured before any jax import).  That rule now lives in ONE place —
+``repro.platform.host_devices`` — whose contract is exactly the old
+setdefault: a caller that already exported XLA_FLAGS wins VERBATIM —
+e.g. the 8-device coded-allreduce test lane sets
 ``--xla_force_host_platform_device_count=8`` and can then import dryrun
 helpers in the same process without its world being clobbered.  Only
 when no XLA_FLAGS are present does importing this module install the
@@ -34,13 +36,12 @@ Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --all   # 40 cells x 2 meshes
 """
 
-import os
+from repro.platform import host_devices
 
 # Must precede every other import (jax locks the device count on first
-# init).  setdefault, not assignment: a pre-set XLA_FLAGS is respected —
-# see the precedence note in the module docstring.
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=512")
+# init).  host_devices follows the documented precedence: a pre-set
+# XLA_FLAGS is respected verbatim — see the module docstring.
+host_devices(512)
 
 import argparse
 import dataclasses

@@ -23,9 +23,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     devs = jax.devices()
     if len(devs) < need:
         raise RuntimeError(
-            f"mesh {shape} needs {need} devices, have {len(devs)} — run under "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py "
-            f"sets this automatically)")
+            f"mesh {shape} needs {need} devices, have {len(devs)} — call "
+            f"repro.platform.host_devices(512) before jax initializes "
+            f"(dryrun.py does this automatically)")
     try:
         return jax.make_mesh(shape, axes, devices=devs[:need])
     except TypeError:  # older make_mesh without devices kwarg
@@ -35,7 +35,7 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small mesh for CPU multi-device tests (device count forced by the
-    calling test via XLA_FLAGS in a subprocess)."""
+    calling test via repro.platform in a subprocess)."""
     if pod:
         shape, axes = (pod, data, model), ("pod", "data", "model")
     else:

@@ -1,10 +1,18 @@
 """Roofline-term extraction from compiled dry-run artifacts.
 
-Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+Three terms per (arch x shape x mesh), in seconds:
 
     compute    = HLO_FLOPs_per_device / peak_flops
     memory     = HLO_bytes_per_device / hbm_bw
     collective = collective_bytes_per_device / link_bw
+
+The peak/bandwidth constants come from ``repro.platform.HARDWARE`` —
+``roofline_terms(hardware=...)`` takes a spec, a HARDWARE key
+("tpu-v5e", "gpu-a100", "cpu", ...), or a platform name.  The default
+is still the TPU-v5e target the dry-run pipeline models, but the
+estimate is no longer silent about it: when jax is initialized on a
+*different* backend the call warns (or raises with strict=True),
+naming both the assumed hardware and the live backend.
 
 `compiled.cost_analysis()` / `lowered/compiled.as_text()` describe the
 per-device SPMD module, so no extra division by chip count is needed.
@@ -22,12 +30,18 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Tuple
+import warnings
+from typing import Dict, Optional, Tuple, Union
 
-# TPU v5e
-PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
-HBM_BW = 819e9               # B/s per chip
-LINK_BW = 50e9               # B/s per ICI link
+from repro.platform import (HARDWARE, HardwareSpec, resolve_hardware,
+                            runtime_platform)
+
+# the hardware the dry-run pipeline models by default; the historical
+# module constants stay as back-compat aliases of the preset
+_DEFAULT_HW = HARDWARE["tpu-v5e"]
+PEAK_FLOPS = _DEFAULT_HW.peak_flops   # bf16 FLOP/s per chip
+HBM_BW = _DEFAULT_HW.hbm_bw           # B/s per chip
+LINK_BW = _DEFAULT_HW.link_bw         # B/s per ICI link
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -124,14 +138,48 @@ def linear_extrapolate(v_small: float, v_big: float, layers_small: int,
     return base + slope * layers_full
 
 
+def _check_hardware_matches(hw: HardwareSpec, strict: bool) -> None:
+    """Warn/raise when estimating for one backend while running another.
+
+    Only consulted when jax has already initialized — querying devices
+    here must never *trigger* backend startup (roofline is static
+    analysis and runs fine on a GPU-less CI host modeling a TPU pod).
+    """
+    live = runtime_platform()
+    if live is None or live == hw.platform:
+        return
+    msg = (f"roofline estimate uses the {hw.name!r} hardware preset "
+           f"({hw.platform}), but jax is running on the {live!r} backend — "
+           f"the seconds/fractions model the preset, not this machine. "
+           f"Pass hardware={live!r} (or a repro.platform.HARDWARE key) to "
+           f"model the live backend.")
+    if strict:
+        raise RuntimeError(msg)
+    warnings.warn(msg, stacklevel=3)
+
+
 def roofline_terms(flops: float, bytes_accessed: float,
-                   collective_bytes: float) -> dict:
-    compute = flops / PEAK_FLOPS
-    memory = bytes_accessed / HBM_BW
-    collective = collective_bytes / LINK_BW
+                   collective_bytes: float, *,
+                   hardware: Union[None, str, HardwareSpec] = None,
+                   check_backend: bool = True,
+                   strict: bool = False) -> dict:
+    """The three roofline terms (seconds) plus the dominant bound.
+
+    ``hardware`` selects the peak/bandwidth preset: a
+    :class:`repro.platform.HardwareSpec`, a ``HARDWARE`` key, a platform
+    name ("tpu"/"gpu"/"cpu"), or None for the tpu-v5e dry-run target.
+    """
+    hw = _DEFAULT_HW if hardware is None else resolve_hardware(hardware)
+    if check_backend:
+        _check_hardware_matches(hw, strict)
+    compute = flops / hw.peak_flops
+    memory = bytes_accessed / hw.hbm_bw
+    collective = collective_bytes / hw.link_bw
     terms = {"compute_s": compute, "memory_s": memory,
-             "collective_s": collective}
-    dominant = max(terms, key=terms.get)
+             "collective_s": collective, "hardware": hw.name}
+    seconds = {"compute_s": compute, "memory_s": memory,
+               "collective_s": collective}
+    dominant = max(seconds, key=seconds.get)
     bound = max(compute, memory, collective)
     terms.update({
         "dominant": dominant.replace("_s", ""),

@@ -75,8 +75,10 @@ def main(argv=None) -> int:
                     help="mean decode err/k the adaptive controller "
                          "steers under (with --adaptive)")
     ap.add_argument("--mesh", default="none", choices=["none", "debug"],
-                    help="'debug' builds a small host mesh (needs "
-                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
+                    help="'debug' builds a small host mesh (needs a "
+                         "forced host-device world — call "
+                         "repro.platform.host_devices(n) before jax, or "
+                         "export REPRO_HOST_DEVICES=n)")
     ap.add_argument("--mesh-data", type=int, default=2)
     ap.add_argument("--mesh-model", type=int, default=2)
     ap.add_argument("--history-out", default=None)

@@ -330,9 +330,9 @@ class ClusterSim:
         analytic path reports — so ``errors`` (device-measured) can be
         compared against ``extras['analytic_errors']`` (engine-derived)
         to validate the E11 frontier against real multi-device
-        execution.  Run under
-        ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a
-        real 8-way mesh; a single device degenerates to lanes = n.
+        execution.  Run with ``repro.platform.host_devices(8)`` (or
+        ``REPRO_HOST_DEVICES=8``) for a real 8-way mesh; a single
+        device degenerates to lanes = n.
 
         ``fused=True`` routes the aggregation through
         ``CodedAllReduce.aggregate_messages_fused`` (one-step decoder

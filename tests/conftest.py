@@ -1,14 +1,30 @@
 """Test bootstrap.
 
-The property tests use hypothesis.  When the real package is installed
-(CI, dev boxes) it is used as-is; on minimal containers we fall back to
-the vendored stub in tests/_stubs, which implements just the strategy /
-@given surface these tests consume (fixed-seed random sampling, no
-shrinking).
+Two jobs, both of which must run before any test imports jax:
+
+* Apply the REPRO_* device-world configuration (platform / host device
+  count / x64) through ``repro.platform.configure_from_env()`` — this
+  is how the CI lanes export their worlds (e.g. the multidevice lane
+  sets ``REPRO_HOST_DEVICES=8``) without hand-rolled XLA_FLAGS strings.
+  Pre-set env (an explicit XLA_FLAGS) still wins verbatim, per the
+  precedence rules documented in ``repro.platform``.
+
+* The property tests use hypothesis.  When the real package is
+  installed (CI, dev boxes) it is used as-is; on minimal containers we
+  fall back to the vendored stub in tests/_stubs, which implements just
+  the strategy / @given surface these tests consume (fixed-seed random
+  sampling, no shrinking).
 """
 
 import sys
 from pathlib import Path
+
+try:  # pragma: no cover - src may be on PYTHONPATH or pip-installed
+    from repro.platform import configure_from_env
+except ImportError:  # pragma: no cover
+    pass
+else:
+    configure_from_env()
 
 try:  # pragma: no cover - environment probe
     import hypothesis  # noqa: F401

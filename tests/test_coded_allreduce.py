@@ -20,13 +20,13 @@ Three layers of trust for the shard_map coded aggregation:
     seed like test_golden_mc.GOLDEN_MEANS.
 
 The in-process tests run on whatever devices exist (1 locally; the CI
-multi-device lane exports XLA_FLAGS=--xla_force_host_platform_device_
-count=8 so the same tests exercise a real 8-way mesh).  Subprocess tests
-force their own device world and never touch this process's jax.
+multi-device lane exports REPRO_HOST_DEVICES=8 — applied by conftest via
+repro.platform.configure_from_env() — so the same tests exercise a real
+8-way mesh).  Subprocess tests force their own device world through
+repro.platform.subprocess_env and never touch this process's jax.
 """
 
 import json
-import os
 import subprocess
 import sys
 import textwrap
@@ -43,6 +43,7 @@ from repro.core.assignment import build_assignment
 from repro.core.engine import DecodeEngine
 from repro.data import CodedDataPipeline, PipelineConfig
 from repro.dist.coded_allreduce import (CodedAllReduce, partition_workers)
+from repro.platform import subprocess_env
 from repro.sim.cluster import ClusterSim
 from repro.sim.traces import make_trace
 
@@ -324,10 +325,12 @@ def _run_subprocess(body: str, timeout: int = 560, x64: bool = True,
         import jax.numpy as jnp
         assert jax.device_count() == 8, jax.devices()
     """) + textwrap.dedent(prelude) + textwrap.dedent(body)
-    env = dict(os.environ, PYTHONPATH=str(REPO / "src"),
-               XLA_FLAGS="--xla_force_host_platform_device_count=8")
-    if x64:
-        env["JAX_ENABLE_X64"] = "1"
+    # override=True: the child asserts device_count == 8, so the forced
+    # cpu-host world must win even when the caller env pins its own
+    # XLA_FLAGS / JAX_PLATFORMS
+    env = subprocess_env(platform="cpu", host_devices=8,
+                         x64=True if x64 else None, override=True)
+    env["PYTHONPATH"] = str(REPO / "src")
     out = subprocess.run([sys.executable, "-c", prog], cwd=REPO, env=env,
                          capture_output=True, text=True, timeout=timeout)
     assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"

@@ -11,13 +11,14 @@ self-contained and seconds-scale; a fence whose first line contains
 ``no-exec`` is skipped; bash fences are never executed.
 """
 
-import os
 import re
 import subprocess
 import sys
 from pathlib import Path
 
 import pytest
+
+from repro.platform import subprocess_env
 
 REPO = Path(__file__).resolve().parent.parent
 
@@ -64,12 +65,10 @@ def test_scraper_found_the_documented_examples():
 @pytest.mark.slow
 @pytest.mark.parametrize("code", SNIPPETS)
 def test_doc_snippet_executes(code):
-    env = dict(
-        os.environ,
-        PYTHONPATH=str(REPO / "src"),
-        JAX_PLATFORMS="cpu",
-        XLA_FLAGS="--xla_force_host_platform_device_count=8",
-    )
+    # override=True: snippets document an exact world (cpu, 8 host
+    # devices) and must not inherit a stray XLA_FLAGS from the runner
+    env = subprocess_env(platform="cpu", host_devices=8, override=True)
+    env["PYTHONPATH"] = str(REPO / "src")
     proc = subprocess.run(
         [sys.executable, "-c", code],
         cwd=REPO,

@@ -1,6 +1,7 @@
 """Multi-device integration: REAL sharded execution (not just lowering)
-on 8 host CPU devices in a subprocess (XLA_FLAGS must be set before jax
-imports, so these run out-of-process).
+on 8 host CPU devices in a subprocess (the device world must be
+configured before jax imports — see repro.platform — so these run
+out-of-process).
 
 Covers: pjit'd coded train step on a (pod=2, data=2, model=2) mesh with
 logical-axis shardings + FSDP, grouped-MoE dispatch under a data axis,
@@ -24,8 +25,8 @@ def _run(body: str, timeout: int = 560) -> dict:
     """Run `body` in a subprocess with 8 host devices; it must print a
     single JSON line starting with RESULT:."""
     prog = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        from repro.platform import configure
+        configure(platform="cpu", host_devices=8)
         import json
         import numpy as np
         import jax
