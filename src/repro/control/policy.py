@@ -44,6 +44,17 @@ least-squares decoding, with an online per-decoder multiplicative
 calibration: ``predict = c[decoder] * band(k, s, delta, decoder)``
 where ``c`` tracks realized-vs-band on the live operating point, so a
 loose bound still ranks candidate configs correctly.
+
+Since PR 10 the calibrated estimate is clamped by *certified* bounds
+(docs/adaptive.md §2): the Wang et al. fundamental lower bound floors
+every candidate band (no decoder on any code can beat it, so admission
+can never ride a too-optimistic calibration below the information-
+theoretic limit), and the spectral-gap certificate of
+:mod:`repro.core.certify` caps it from above when informative.  A
+candidate whose spectral certificate alone fits the error budget —
+a worst-case, every-adversarial-mask guarantee, not an expectation —
+is admitted with ``certified=True``, surfaced on the emitted
+:class:`Action` and thus in the ``actions`` history.
 """
 
 from __future__ import annotations
@@ -53,6 +64,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from ..core import certify as certify_lib
 from ..core import theory
 from ..core.registry import CodeFamily
 from .estimator import EstimatorState
@@ -63,11 +75,16 @@ __all__ = ["Action", "ControlConfig", "AdaptivePolicy", "error_band"]
 @dataclasses.dataclass(frozen=True)
 class Action:
     """One controller decision; ``value`` is the new s / decoder name /
-    deadline seconds depending on ``kind``."""
+    deadline seconds depending on ``kind``.  ``certified`` records
+    whether the admitted operating point's spectral certificate alone
+    (worst-case over adversarial straggler sets — core.certify) fits
+    the error budget; False means admission leaned on the calibrated
+    estimate."""
 
     kind: str  # "set_s" | "set_decoder" | "set_deadline"
     value: object
     reason: str = ""
+    certified: bool = False
 
     KINDS = ("set_s", "set_decoder", "set_deadline")
 
@@ -198,8 +215,44 @@ class AdaptivePolicy:
     # ------------------------------------------------------------------
 
     def _band(self, s: int, delta: float, dec: str, guard: float = 1.0) -> float:
+        return self._banded(s, delta, dec, guard)[0]
+
+    def _lb_frac(self, s: int, delta: float) -> float:
+        """Fundamental lower bound on err/k (Wang et al.) — no decoder
+        on any code of sparsity s can do better in expectation."""
+        delta = float(min(max(delta, 0.0), 1.0))
+        r = max(0, min(self.n, int(round((1.0 - delta) * self.n))))
+        return theory.fundamental_err_lower_bound(self.k, s, r, self.n) / self.k
+
+    def _cert_frac(self, s: int, delta: float) -> Optional[float]:
+        """Spectral-certificate err/k upper bound (None when the family
+        can't be certified at this point or the bound is vacuous).
+        Cached per (family, k, n, s) inside core.certify; for the
+        randomized families this certifies a pinned representative
+        draw (docs/adaptive.md §2)."""
+        delta = float(min(max(delta, 0.0), 0.95))
+        return certify_lib.certified_err_frac(
+            self.family.name, self.k, self.n, s, delta
+        )
+
+    def _banded(
+        self, s: int, delta: float, dec: str, guard: float = 1.0
+    ) -> Tuple[float, bool]:
+        """(band, certified): the calibrated estimate clamped into the
+        certified corridor [fundamental LB, spectral UB].  The guard
+        (block-correlation inflation) applies to the calibrated term
+        only — the spectral certificate is already worst-case over
+        every mask, correlated or not.  ``certified`` is True when the
+        spectral certificate alone fits the full error budget."""
         c = self._calib.get(dec, 1.0)
-        return guard * c * error_band(self.family.name, self.k, s, delta, dec)
+        calib = guard * c * error_band(self.family.name, self.k, s, delta, dec)
+        lb = self._lb_frac(s, delta)
+        ub = self._cert_frac(s, delta)
+        band = max(calib, lb)
+        if ub is not None:
+            band = max(lb, min(band, ub))
+        certified = ub is not None and ub <= self.cfg.error_budget
+        return band, certified
 
     def _calibrate(self, est: EstimatorState) -> None:
         """Track realized / band on the live operating point."""
@@ -215,9 +268,9 @@ class AdaptivePolicy:
             )
 
     def _candidates(self, est: EstimatorState):
-        """(ttt, s, decoder, deadline) over the ladder x decoders x the
-        observed latency-quantile grid; onestep enumerated first so
-        exact ties prefer the cheaper decoder."""
+        """(ttt, s, decoder, deadline, certified) over the ladder x
+        decoders x the observed latency-quantile grid; onestep
+        enumerated first so exact ties prefer the cheaper decoder."""
         if est.lat_rows is not None:
             quantile_grid = (0.5, 0.75, 0.9, 0.95, 0.99)
             grid = sorted(
@@ -235,7 +288,7 @@ class AdaptivePolicy:
                 delta = est.erasure_at(d)
                 b_now = self._band(self.s, delta, dec, guard)
                 for s in self._ladder:
-                    e = self._band(s, delta, dec, guard)
+                    e, cert = self._banded(s, delta, dec, guard)
                     if s > self.s and corr > 0.0 and e > 0.0 and b_now > 0.0:
                         # block-correlated erasures kill a task's
                         # same-block replicas together, so raising s
@@ -247,7 +300,7 @@ class AdaptivePolicy:
                     if e > budget:
                         continue
                     ttt = est.step_time_at(d) * s / (1.0 - min(e, 0.99))
-                    out.append((ttt, s, dec, d))
+                    out.append((ttt, s, dec, d, cert))
         return out
 
     def _step_s(self, direction: int) -> Optional[int]:
@@ -306,23 +359,26 @@ class AdaptivePolicy:
             ttt_now *= (err_now / cfg.error_budget) ** 2
         if best[0] >= (1.0 - cfg.improve_margin) * ttt_now:
             return None  # not enough predicted gain: hold still
-        _, s_c, dec_c, d_c = best
+        _, s_c, dec_c, d_c, cert_c = best
         d_move = abs(d_c / max(self.deadline, 1e-9) - 1.0)
         if d_move > cfg.deadline_deadband:
             if step - self._last_deadline >= cfg.deadline_every:
                 reason = f"quantile argmin (delta~{est.erasure_at(d_c):.3f})"
-                action = Action("set_deadline", float(d_c), reason)
+                action = Action("set_deadline", float(d_c), reason, certified=cert_c)
                 return self._apply(step, action)
         if step - self._last_recode < cfg.cooldown:
             return None
         if dec_c != self.decoder:
-            action = Action("set_decoder", dec_c, "ttt argmin decoder")
+            action = Action(
+                "set_decoder", dec_c, "ttt argmin decoder", certified=cert_c
+            )
             return self._apply(step, action)
         if s_c != self.s:
             rung = self._step_s(+1 if s_c > self.s else -1)
             if rung is not None:
                 reason = f"toward ttt argmin s={s_c}"
-                return self._apply(step, Action("set_s", rung, reason))
+                action = Action("set_s", rung, reason, certified=cert_c)
+                return self._apply(step, action)
         return None
 
     def _apply(self, step: int, action: Action) -> Action:

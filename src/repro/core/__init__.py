@@ -38,4 +38,5 @@ from .decoding import (  # noqa: F401
 from .assignment import CodedAssignment, build_assignment  # noqa: F401
 from .engine import BatchDecode, DecodeEngine  # noqa: F401
 from .registry import CodeFamily  # noqa: F401
-from . import adversary, registry, simulate, theory  # noqa: F401
+from .certify import SpectralCertificate, adversarial_err1_bound  # noqa: F401
+from . import adversary, certify, registry, simulate, theory  # noqa: F401

@@ -1,0 +1,162 @@
+"""Spectral-gap certificates for graph-structured gradient codes.
+
+Raviv, Tamo, Tandon & Dimakis ("Gradient Coding from Cyclic MDS Codes
+and Expander Graphs", arXiv:1707.03858) bound the one-step decoding
+error of an expander-based code by its spectral gap — a *worst-case*
+(adversarial-erasure) guarantee, unlike the in-expectation bounds in
+core.theory.  This module generalizes that argument to every bipartite
+k x n assignment matrix in the registry, including irregular ones.
+
+Derivation (self-contained; reduces exactly to the paper's Theorem for
+k = n biregular G):
+
+With one-step decoding, v = rho_r * G m where m in {0,1}^n is the
+survivor mask, |m| = r, rho_r = k/(r s).  Split m = (r/n) 1 + m_perp
+and center G per-row:  E = G - (1/n) (G 1) 1^T,  so E 1 = 0 and
+E m = E m_perp.  Then
+
+    v - 1 = [ (k/(n s)) G 1 - 1 ]  +  rho_r * E m_perp
+            '--- irregularity ---'    '--- spectral term ---'
+
+and since ||m_perp||_2^2 = r(n - r)/n for EVERY mask with r survivors,
+
+    err_1 = ||v - 1||_2^2  <=  ( b_irr + b_spec )^2,
+
+    b_irr  = || (k/(n s)) G 1 - 1 ||_2          (0 for biregular G),
+    b_spec = (k/(r s)) * sigma~ * sqrt(r (n-r)/n)
+           = (k * sigma~ / s) * sqrt(delta / ((1 - delta) n)),
+
+with sigma~ = ||E||_2 and delta = 1 - r/n.  For k = n biregular G,
+sigma~ = lambda(G) (the centering removes exactly the Perron direction)
+and the bound collapses to theory.thm3_expander_err1_bound:
+(lambda^2/s^2) * delta k/(1-delta).
+
+The certificate holds for EVERY survivor set of size >= r (adversarial
+stragglers), and optimal/least-squares decoding can only do better on
+the same mask, so it certifies both `onestep` and `optimal`.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Optional
+
+import numpy as np
+
+from .codes import GradientCode
+
+__all__ = [
+    "SpectralCertificate",
+    "certify",
+    "adversarial_err1_bound",
+    "certified_err_frac",
+]
+
+
+def adversarial_err1_bound(k: int, n: int, s: int, delta: float,
+                           lam: float, irregularity: float = 0.0) -> float:
+    """Worst-case one-step error over all masks with >= (1-delta)*n
+    survivors: (b_irr + b_spec)^2, unnormalized (in units of err, not
+    err/k).  `lam` is ||G - (1/n)(G 1)1^T||_2, `irregularity` is
+    ||(k/(ns)) G 1 - 1||_2."""
+    if not (0.0 <= delta < 1.0):
+        raise ValueError(f"delta in [0, 1) required, got {delta}")
+    if min(k, n, s) <= 0:
+        raise ValueError("k, n, s >= 1 required")
+    b_spec = (k * lam / s) * math.sqrt(delta / ((1.0 - delta) * n))
+    return (irregularity + b_spec) ** 2
+
+
+@dataclass(frozen=True)
+class SpectralCertificate:
+    """An adversarial-erasure error certificate for one assignment matrix.
+
+    Fields are mask-independent; err1_bound(delta) instantiates the
+    guarantee at a straggler fraction.  `lam` is the centered operator
+    norm sigma~ (== the expander gap lambda(G) for biregular G);
+    `irregularity` is the degree-imbalance term (0 for biregular G).
+    """
+
+    k: int
+    n: int
+    s: int
+    lam: float
+    irregularity: float
+    sigma1: float  # top singular value of raw G, for diagnostics
+
+    def err1_bound(self, delta: float) -> float:
+        """Worst-case err_1 over every mask with >= (1-delta)*n
+        survivors (unnormalized, certifies onestep AND optimal)."""
+        return adversarial_err1_bound(self.k, self.n, self.s, delta,
+                                      self.lam, self.irregularity)
+
+    def err_frac_bound(self, delta: float) -> float:
+        """err/k form, clipped to the trivial bound: err/k <= 1 always
+        holds for one-step decoding only when rho G m has no overshoot,
+        so we clip at the uncoded worst case k (err/k = 1 means 'the
+        certificate says nothing better than losing every task')."""
+        return min(1.0, self.err1_bound(delta) / self.k)
+
+    def certifies(self, delta: float, err_frac_budget: float) -> bool:
+        """True iff the theorem alone guarantees err/k <= budget at
+        straggler fraction delta — for every adversarial mask."""
+        return self.err_frac_bound(delta) <= err_frac_budget
+
+
+def certify(code: GradientCode, s: Optional[int] = None) -> SpectralCertificate:
+    """Compute the spectral certificate of a concrete assignment matrix.
+
+    Works for any k x n binary G (square or ragged, regular or not).
+    The one-step rho uses s = column sparsity; pass `s` explicitly if
+    the code object's nominal s differs from the realized mean degree
+    (bgc's Bernoulli columns — the certificate is for the realized G).
+    """
+    G = np.asarray(code.G, dtype=np.float64)
+    k, n = G.shape
+    s_eff = int(s if s is not None else code.s)
+    if s_eff <= 0:
+        raise ValueError("s >= 1 required")
+    row = G.sum(axis=1)  # G 1, per-task replication counts
+    E = G - np.outer(row, np.ones(n)) / n
+    sig = np.linalg.svd(G, compute_uv=False)
+    lam = float(np.linalg.norm(E, ord=2))
+    irr = float(np.linalg.norm((k / (n * s_eff)) * row - 1.0))
+    return SpectralCertificate(k=k, n=n, s=s_eff, lam=lam,
+                               irregularity=irr, sigma1=float(sig[0]))
+
+
+@lru_cache(maxsize=4096)
+def _representative_cert(family: str, k: int, n: int, s: int,
+                         seed: int) -> Optional[SpectralCertificate]:
+    """Certificate of a pinned representative draw of a registry family.
+
+    For deterministic families (frc/cyclic/uncoded/sregular at fixed
+    seed) this IS the deployed matrix.  For randomized families the
+    certificate is for one representative draw; the spectral gap of
+    sparse random graphs concentrates (O(sqrt(s)) fluctuations around
+    2 sqrt(s-1)), so it tracks any same-parameter draw closely — the
+    honest contract is documented in docs/adaptive.md.  Returns None
+    when the family can't build at (k, n, s).
+    """
+    from . import registry  # deferred: keep certify importable standalone
+
+    try:
+        code = registry.make(family, k=k, n=n, s=s, seed=seed)
+    except (ValueError, KeyError):
+        return None
+    return certify(code, s=s)
+
+
+def certified_err_frac(family: str, k: int, n: int, s: int, delta: float,
+                       seed: int = 0) -> Optional[float]:
+    """err/k certificate for a registry family at an operating point, or
+    None when unavailable (family can't build, or the bound is vacuous
+    i.e. >= 1).  Cached per (family, k, n, s, seed); delta is applied to
+    the cached mask-independent certificate."""
+    cert = _representative_cert(family, k, n, s, seed)
+    if cert is None:
+        return None
+    frac = cert.err_frac_bound(delta)
+    return frac if frac < 1.0 else None

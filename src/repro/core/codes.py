@@ -341,13 +341,25 @@ def make_code(
 
 
 def spectral_gap(code: GradientCode) -> float:
-    """lambda(G) = max(|lambda_2|, |lambda_k|) for (square, symmetric) G.
+    """Second-largest singular value of G (= max(|lambda_2|, |lambda_k|)
+    for symmetric square G).
 
-    Used by theory.thm3_expander_bound.  Only meaningful for graph-
-    adjacency codes (sregular); raises otherwise.
+    For a symmetric adjacency matrix (sregular) this is the classic
+    expander gap used by theory.thm3_expander_err1_bound.  For the
+    general bipartite k x n case (expander/sbm at ragged sizes) the
+    right generalization is sigma_2 of the biadjacency matrix: the
+    eigenvalues of the symmetric square [[0, G], [G^T, 0]] are exactly
+    {+-sigma_i} plus |k - n| zeros, so sigma_2(G) IS the second-largest
+    |eigenvalue| of the bipartite graph's adjacency matrix, and for
+    symmetric nonnegative G it coincides with max(|lambda_2|,
+    |lambda_k|) (Perron: lambda_1 dominates).  core.certify turns this
+    into an adversarial-erasure error certificate.
     """
     G = code.G
-    if G.shape[0] != G.shape[1] or not np.allclose(G, G.T):
-        raise ValueError("spectral_gap requires a symmetric square G")
-    lam = np.linalg.eigvalsh(G)
-    return float(max(abs(lam[0]), abs(lam[-2])))
+    if G.shape[0] == G.shape[1] and np.allclose(G, G.T):
+        lam = np.linalg.eigvalsh(G)
+        return float(max(abs(lam[0]), abs(lam[-2])))
+    sig = np.linalg.svd(G, compute_uv=False)
+    if sig.size < 2:
+        raise ValueError("spectral_gap needs min(k, n) >= 2")
+    return float(sig[1])

@@ -37,6 +37,7 @@ from typing import Callable, Dict, Mapping, Optional, Tuple
 import numpy as np
 
 from . import codes as codes_lib
+from . import theory
 from .codes import GradientCode
 
 __all__ = [
@@ -53,6 +54,14 @@ __all__ = [
 
 # decoder surface of core.engine.DecodeEngine / core.decoding
 DECODERS = ("onestep", "optimal", "algorithmic", "ignore")
+
+def _lb_err_frac(k: int, n: int, s: int, delta: float) -> float:
+    """Fundamental lower bound on err/k at straggler fraction delta,
+    evaluated with the fixed-survivor-count (hypergeometric) form —
+    the weaker of the two forms, so the floor never over-rejects."""
+    r = max(0, min(n, int(round((1.0 - delta) * n))))
+    return theory.fundamental_err_lower_bound(k, s, r, n) / k
+
 
 # adversary profiles (paper Sec. 4): "block" = the linear-time FRC
 # block-killing adversary applies structurally; "greedy" = only the
@@ -119,16 +128,57 @@ class CodeFamily:
         return None
 
     def legal_s(self, k: int, n: int, lo: int = 1,
-                hi: Optional[int] = None) -> Tuple[int, ...]:
+                hi: Optional[int] = None, *,
+                delta: Optional[float] = None,
+                error_budget: Optional[float] = None) -> Tuple[int, ...]:
         """All s in [lo, hi] this family can construct at (k, n).
 
         The ragged-size test harness picks from this instead of
         special-casing divisibility rules (FRC needs s | k, s-regular
         needs k*s even) per family.
+
+        With ``delta=`` and ``error_budget=`` the ladder is additionally
+        filtered by the Wang et al. fundamental limit: rungs whose
+        lower bound already exceeds the budget (err/k) at straggler
+        fraction delta are budget-infeasible for EVERY code and decoder,
+        so no amount of calibration can admit them.
         """
         hi = k if hi is None else min(hi, k)
-        return tuple(s for s in range(max(lo, 1), hi + 1)
-                     if self.check(k, n, s) is None)
+        rungs = tuple(s for s in range(max(lo, 1), hi + 1)
+                      if self.check(k, n, s) is None)
+        if error_budget is None:
+            return rungs
+        if delta is None:
+            raise ValueError("error_budget= requires delta= (the straggler "
+                             "fraction the budget must hold at)")
+        return tuple(s for s in rungs
+                     if _lb_err_frac(k, n, s, delta) <= error_budget)
+
+    def s_floor(self, k: int, n: int, *, delta: float,
+                error_budget: float) -> int:
+        """Smallest constructible s whose fundamental lower bound fits
+        the err/k budget at straggler fraction delta.
+
+        Derived from theory.fundamental_err_lower_bound (Wang et al.),
+        which holds for every assignment matrix of column sparsity s and
+        every decoder — below this floor the budget is information-
+        theoretically impossible, not merely uncalibrated.  Raises
+        ValueError when no legal s fits.
+        """
+        feasible = self.legal_s(k, n, delta=delta, error_budget=error_budget)
+        if not feasible:
+            best = self.legal_s(k, n)
+            detail = ""
+            if best:
+                lb = _lb_err_frac(k, n, best[-1], delta)
+                detail = (f" (even s={best[-1]} has fundamental lower "
+                          f"bound err/k >= {lb:.4g})")
+            raise ValueError(
+                f"no s in [1, {k}] lets family {self.name!r} meet "
+                f"err/k <= {error_budget:g} at delta={delta:g} for "
+                f"(k={k}, n={n}){detail}; raise the error budget, lower "
+                f"delta, or add workers")
+        return feasible[0]
 
     # ------------------------------------------------------------------
     # construction
@@ -136,13 +186,39 @@ class CodeFamily:
 
     def make(self, k: int, n: int, s: int,
              rng: Optional[np.random.Generator] = None,
-             seed: Optional[int] = None, **params) -> GradientCode:
+             seed: Optional[int] = None, *,
+             delta: Optional[float] = None,
+             error_budget: Optional[float] = None,
+             **params) -> GradientCode:
+        """Build a code, optionally enforcing the fundamental-limit floor.
+
+        With ``delta=`` and ``error_budget=`` the requested s is checked
+        against the Wang et al. lower bound and rejected (with the
+        feasible floor named) when the budget is provably unreachable.
+        """
         reason = self.check(k, n, s)
         if reason is not None:
             raise ValueError(
                 f"cannot construct {self.name!r} at (k={k}, n={n}, s={s}): "
                 f"{reason}; legal s at this size: "
                 f"{self.legal_s(k, n, hi=min(k, 64))}")
+        if error_budget is not None:
+            if delta is None:
+                raise ValueError("error_budget= requires delta= (the "
+                                 "straggler fraction the budget must hold "
+                                 "at)")
+            lb = _lb_err_frac(k, n, s, delta)
+            if lb > error_budget:
+                floor = self.s_floor(k, n, delta=delta,
+                                     error_budget=error_budget)
+                raise ValueError(
+                    f"s={s} is below the fundamental-limit floor for "
+                    f"{self.name!r} at (k={k}, n={n}): the Wang et al. "
+                    f"lower bound gives err/k >= {lb:.4g} > budget "
+                    f"{error_budget:g} at delta={delta:g} for EVERY code "
+                    f"of this sparsity and every decoder; smallest "
+                    f"feasible s is {floor} (raise s, raise the budget, "
+                    f"or lower delta)")
         if rng is None:
             rng = np.random.default_rng(0 if seed is None else seed)
         return self.constructor(k, n, s, rng=rng, **params)
@@ -187,9 +263,15 @@ def names() -> Tuple[str, ...]:
 
 def make(name: str, k: int, n: int, s: int,
          rng: Optional[np.random.Generator] = None,
-         seed: Optional[int] = None, **params) -> GradientCode:
-    """The factory every scheme-switch resolves through."""
-    return get(name).make(k, n, s, rng=rng, seed=seed, **params)
+         seed: Optional[int] = None, *,
+         delta: Optional[float] = None,
+         error_budget: Optional[float] = None, **params) -> GradientCode:
+    """The factory every scheme-switch resolves through.
+
+    ``delta=`` + ``error_budget=`` opt into the fundamental-limit floor
+    (reject s the Wang et al. bound proves budget-infeasible)."""
+    return get(name).make(k, n, s, rng=rng, seed=seed, delta=delta,
+                          error_budget=error_budget, **params)
 
 
 def randomized_schemes() -> Tuple[str, ...]:

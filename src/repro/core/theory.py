@@ -2,10 +2,18 @@
 
 Every function cites its theorem.  Combinatorial quantities use exact
 integer arithmetic (math.comb) and return floats.
+
+Beyond the source paper this module carries the *fundamental limit* of
+approximate gradient coding (Wang, Liu & Shroff, arXiv:1901.08166): a
+computation-load/error lower bound that every code family — not just
+the paper's constructions — can be measured against.  See
+docs/theory.md for the full theorem -> function -> source-paper map,
+and core.certify for the spectral-gap certificates built on top.
 """
 
 from __future__ import annotations
 
+import functools
 import math
 
 import numpy as np
@@ -24,6 +32,9 @@ __all__ = [
     "thm24_rbgc_err1_bound",
     "lemma4_expected_gram_frc",
     "expected_err1_bgc_exact",
+    "fundamental_err_lower_bound",
+    "fundamental_err_lower_bound_load",
+    "gap_to_optimal",
 ]
 
 
@@ -148,6 +159,106 @@ def expected_err1_bgc_exact(k: int, s: int, r: int) -> float:
     rho = k / (r * s)
     m2 = r * p * (1 - p) + (r * p) ** 2  # E[(row sum)^2]
     return k * (rho**2 * m2 - 2 * rho * r * p + 1)
+
+
+@functools.lru_cache(maxsize=65536)
+def fundamental_err_lower_bound(k: int, s: int, r: int, n: int | None = None
+                                ) -> float:
+    """Wang-Liu-Shroff fundamental limit (arXiv:1901.08166, Thm 1 shape).
+
+    For ANY assignment matrix G in {0,1}^{k x n} whose total computation
+    load is at most n*s (column degree <= s on average), and ANY decoder,
+    the expected squared error under a uniformly random set of r
+    survivors satisfies
+
+        E[err] >= min over degree profiles d_1..d_k, sum d_i <= n*s of
+                  sum_i C(n - d_i, r) / C(n, r),
+
+    because a task whose d_i assigned workers all straggle is *uncovered*
+    and contributes at least 1 to ||G m w - 1||^2 for every weight vector
+    w (the task's row of the decoded sum is exactly 0, the target is 1).
+    f(d) = C(n-d, r)/C(n, r) is convex in d (its successive ratio
+    (n-d-r)/(n-d) is decreasing), so the minimum splits the n*s replica
+    budget as evenly as integer degrees allow:
+
+        d_lo = floor(n*s/k),  k_hi = n*s - k*d_lo  tasks get  d_lo + 1.
+
+        LB = (k - k_hi) * f(d_lo) + k_hi * f(d_lo + 1).
+
+    Equality holds for FRC under optimal decoding (Theorem 6:
+    thm6_expected_err_frc(k, s, r) == LB when n == k and s | k), which
+    makes FRC *optimal* among all codes of the same load — the reference
+    point for gap_to_optimal.  Returns the unnormalized error in [0, k];
+    divide by k for the err/k convention used by the frontier.
+    """
+    n = k if n is None else n
+    if not (0 <= r <= n):
+        raise ValueError(f"need 0 <= r <= n, got r={r}, n={n}")
+    if k <= 0 or s < 0:
+        raise ValueError("k >= 1 and s >= 0 required")
+    if r == 0:
+        return float(k)
+    denom = math.comb(n, r)
+
+    def f(d: int) -> float:
+        d = min(d, n)
+        return math.comb(n - d, r) / denom if n - d >= r else 0.0
+
+    budget = n * s
+    d_lo = budget // k
+    k_hi = budget - k * d_lo
+    return (k - k_hi) * f(d_lo) + k_hi * f(d_lo + 1)
+
+
+def fundamental_err_lower_bound_load(k: int, s: int, delta: float,
+                                     n: int | None = None) -> float:
+    """Normalized-load (iid-straggler) form of the fundamental limit.
+
+    When each worker straggles independently with probability delta, a
+    task of degree d is uncovered with probability delta**d, so
+
+        E[err] >= (k - k_hi) * delta**d_lo + k_hi * delta**(d_lo + 1)
+
+    with the same even integer split of the n*s replica budget
+    (delta**d is convex in d).  Note the fixed-r hypergeometric form is
+    tighter at the same mean load: C(n-d, r)/C(n, r) <= (1 - r/n)**d,
+    so use `fundamental_err_lower_bound` when the survivor *count* is
+    fixed and this form when workers straggle independently (the
+    ClusterSim deadline policies are closer to the iid model).
+    Returns the unnormalized error in [0, k].
+    """
+    n = k if n is None else n
+    if not (0.0 <= delta <= 1.0):
+        raise ValueError(f"delta in [0, 1] required, got {delta}")
+    if k <= 0 or s < 0:
+        raise ValueError("k >= 1 and s >= 0 required")
+    budget = n * s
+    d_lo = budget // k
+    k_hi = budget - k * d_lo
+    return (k - k_hi) * delta**d_lo + k_hi * delta ** (d_lo + 1)
+
+
+def gap_to_optimal(measured_err: float, k: int, s: int, *,
+                   r: int | None = None, delta: float | None = None,
+                   n: int | None = None) -> float:
+    """Ratio of a measured error to the fundamental lower bound.
+
+    Pass `r` for the fixed-survivor-count (hypergeometric) bound or
+    `delta` for the iid-straggler bound — exactly one of the two.
+    A gap of 1.0 means the family sits on the fundamental limit (FRC
+    with optimal decoding); larger means headroom.  Returns inf when
+    the bound is 0 (e.g. delta == 0) but error was measured, and 1.0
+    when both are (numerically) zero.
+    """
+    if (r is None) == (delta is None):
+        raise ValueError("pass exactly one of r= or delta=")
+    if r is not None:
+        lb = fundamental_err_lower_bound(k, s, r, n)
+    else:
+        lb = fundamental_err_lower_bound_load(k, s, delta, n)
+    if lb <= 0.0:
+        return 1.0 if measured_err <= 1e-12 else math.inf
+    return max(0.0, measured_err) / lb
 
 
 def frc_err_distribution(k: int, s: int, r: int, max_alpha: int | None = None

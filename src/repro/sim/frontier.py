@@ -21,12 +21,12 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from ..core import registry
+from ..core import registry, theory
 from .cluster import ClusterRunResult, ClusterSim, SyncPolicy, make_policy
 from .traces import LatencyTrace
 
 __all__ = ["FrontierPoint", "sweep_frontier", "sweep_adaptive",
-           "pareto_front", "time_to_target_error"]
+           "pareto_front", "time_to_target_error", "gap_to_optimal_frac"]
 
 
 @dataclasses.dataclass
@@ -39,9 +39,33 @@ class FrontierPoint:
     mean_error: float          # mean decode err / k over the run
     mean_stragglers: float
     time_to_target: float      # convergence-penalty-adjusted wall-clock
+    # measured error / Wang et al. fundamental lower bound at the cell's
+    # realized straggler fraction (1.0 = on the limit; None when the
+    # bound is 0, i.e. no stragglers, or for adaptive cells whose s
+    # varies over the run)
+    gap_to_optimal: Optional[float] = None
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+def gap_to_optimal_frac(mean_error: float, k: int, n: int, s: int,
+                        mean_stragglers: float) -> Optional[float]:
+    """Measured err/k over the fundamental limit's err/k at the
+    realized mean straggler fraction (iid-load form — the ClusterSim
+    deadline policies straggle per-worker, not fixed-count).  None when
+    the bound is 0 (delta = 0: any code is exact with all workers
+    alive, so there is no gap to measure); the bound evaluated at the
+    MEAN delta understates the per-step average (delta**d is convex),
+    so the ratio tends to overstate the gap.  A ratio below 1 — e.g. a
+    backup policy that covered every task on every step, err exactly
+    0 — means the realized mask ensemble was gentler than the uniform
+    straggler model the bound assumes, not that the limit was beaten."""
+    delta = float(min(max(mean_stragglers / max(n, 1), 0.0), 1.0))
+    lb = theory.fundamental_err_lower_bound_load(k, s, delta, n) / k
+    if lb <= 0.0:
+        return None
+    return max(0.0, mean_error) / lb
 
 
 def time_to_target_error(result: ClusterRunResult,
@@ -96,7 +120,9 @@ def sweep_frontier(
                     mean_step_time=res.mean_step_time,
                     mean_error=res.mean_error,
                     mean_stragglers=res.mean_stragglers,
-                    time_to_target=time_to_target_error(res)))
+                    time_to_target=time_to_target_error(res),
+                    gap_to_optimal=gap_to_optimal_frac(
+                        res.mean_error, k, n, s, res.mean_stragglers)))
     return out
 
 

@@ -87,6 +87,23 @@ class TestSRegular:
         # random regular graphs are near-Ramanujan: lambda ~ 2 sqrt(s-1)
         assert lam < 2 * np.sqrt(7) * 1.5
 
+    def test_spectral_gap_ragged_bipartite(self):
+        """Regression: spectral_gap used to raise 'requires a symmetric
+        square G' on any k != n code, so the expander family could not
+        be certified at ragged sizes (PR-10 tentpole fix).  Now it
+        returns sigma_2 of the biadjacency matrix."""
+        for name, k, n in (("expander", 96, 64), ("expander", 48, 72),
+                           ("sbm", 60, 40)):
+            code = C.make_code(name, k=k, n=n, s=6, seed=0)
+            lam = C.spectral_gap(code)
+            sig = np.linalg.svd(code.G.astype(float), compute_uv=False)
+            assert lam == pytest.approx(float(sig[1]), abs=1e-9)
+            assert 0.0 < lam < float(sig[0])  # gap strictly inside
+        # biregular expander columns have degree exactly s: sigma_1
+        # carries the (s, ns/k) degree structure, sigma_2 ~ 2 sqrt(s-1)
+        code = C.make_code("expander", k=96, n=64, s=6, seed=0)
+        assert C.spectral_gap(code) < 2 * np.sqrt(5) * 1.6
+
 
 class TestCyclicAndUncoded:
     def test_cyclic_degrees(self):

@@ -101,6 +101,66 @@ def test_error_band_shapes():
     assert error_band("bgc", 8, 4, 0.95, "onestep") == 1.0
 
 
+def test_certified_band_corridor():
+    """PR 10: the policy band is the calibrated estimate clamped into
+    [fundamental lower bound, spectral-certificate upper bound]."""
+    from repro.control.policy import AdaptivePolicy
+    from repro.core import theory
+
+    pol = AdaptivePolicy(
+        registry.get("sregular"), 256, 256, ControlConfig(error_budget=0.1),
+        s=8, decoder="onestep",
+    )
+    for s in (4, 8):
+        for delta in (0.1, 0.3):
+            band, certified = pol._banded(s, delta, "onestep")
+            r = int(round((1 - delta) * 256))
+            lb = theory.fundamental_err_lower_bound(256, s, r, 256) / 256
+            assert band >= lb - 1e-12
+    # blow the calibration sky-high: the certificate must cap the band
+    pol._calib["onestep"] = 1e3
+    band_hi, certified = pol._banded(8, 0.1, "onestep")
+    from repro.core.certify import certified_err_frac
+
+    ub = certified_err_frac("sregular", 256, 256, 8, 0.1)
+    assert band_hi <= ub + 1e-12
+    assert certified  # the certificate alone fits the 0.1 budget
+
+
+def test_certified_flag_surfaced_in_action_history():
+    """A family whose spectral certificate fits the budget (sregular at
+    n = 256) emits certified=True actions; bgc's certificate is vacuous
+    at this size (degree irregularity), so its actions stay False."""
+    rng = np.random.default_rng(0)
+    flags = {}
+    for fam in ("sregular", "bgc"):
+        coder = AdaptiveCoder(fam, 256, ControlConfig(error_budget=0.1), s=8)
+        for t in range(120):
+            lat = rng.exponential(0.3, size=256) + 1.0
+            mask = lat <= coder.deadline
+            coder.observe(
+                t, mask=mask, latencies=lat,
+                decode_err=0.03 + 0.01 * rng.random(),
+            )
+            coder.decide(t)
+        acts = coder.policy.actions
+        assert acts, f"{fam}: controller never acted"
+        flags[fam] = [a.certified for _, a in acts]
+    assert any(flags["sregular"])
+    assert not any(flags["bgc"])
+
+
+def test_action_certified_roundtrips_through_state_dict():
+    coder = AdaptiveCoder("sregular", 64, ControlConfig(), s=4)
+    coder.policy._apply(0, Action("set_s", 6, "test", certified=True))
+    # the runner serializes its own action log; the policy Action
+    # dataclass itself must round-trip the new field
+    import dataclasses
+
+    a = coder.policy.actions[0][1]
+    assert Action(**dataclasses.asdict(a)) == a
+
+
 # ------------------------------ actions / config ----------------------------
 
 def test_action_and_config_validation():
